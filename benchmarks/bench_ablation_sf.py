@@ -1,0 +1,52 @@
+"""Ablation (beyond the paper's figures, §3.2 parameter guidance): the
+success fraction sf under per-round participant failures — sf < 1 keeps
+rounds fast when stragglers/failures occur, at a small accuracy cost."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import ModestConfig, TrainConfig
+from repro.data import make_classification_task
+from repro.models.tasks import cnn_task
+from repro.sim.runner import ModestSession
+
+
+def run(quick: bool = True):
+    n = 24 if quick else 100
+    duration = 120.0 if quick else 600.0
+    data = make_classification_task(n, samples_per_node=30, iid=False,
+                                    alpha=0.3, seed=0)
+    task = cnn_task()
+    rows = []
+    for sf in (1.0, 0.75, 0.5):
+        mcfg = ModestConfig(n_nodes=n, sample_size=8, n_aggregators=2,
+                            success_fraction=sf, ping_timeout=1.0)
+        s = ModestSession(n_nodes=n, mcfg=mcfg, tcfg=TrainConfig(batch_size=20),
+                          task=task, data=data, seed=0, eval_every_rounds=10)
+        # transient unresponsiveness: every 20s, knock 3 random nodes
+        # offline for 10s (z failures per round; paper sets sf <= (s-z)/s)
+        rng = np.random.default_rng(1)
+        for t in range(20, int(duration) - 10, 20):
+            for v in rng.choice(n, size=3, replace=False):
+                nid = str(v)
+                s.sim.schedule(float(t), lambda nid=nid: s.nodes[nid].crash())
+                s.sim.schedule(float(t + 10),
+                               lambda nid=nid: s.nodes[nid].recover())
+        res = s.run(duration)
+        accs = [h["accuracy"] for h in res.history if "accuracy" in h]
+        rows.append({
+            "bench": "sf_ablation", "sf": sf,
+            "rounds": res.rounds_completed,
+            "final_accuracy": round(accs[-1], 4) if accs else "",
+            "mean_sample_ms": round(1000 * float(np.mean(
+                [d for _, d in res.sample_durations])), 1)
+            if res.sample_durations else "",
+        })
+    emit(rows, "sf_ablation.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: aggregation + quantization vs their jnp refs.
+
+On this CPU container Pallas runs in interpret mode, so absolute times are
+NOT TPU-representative; the benchmark validates numerics at size and
+reports the HBM-traffic model that the roofline uses (the kernel is
+bandwidth-bound by design: bytes = (P+1) · N · itemsize per call).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import V5E
+from repro.kernels import aggregate_flat, dequantize_flat, quantize_flat
+from repro.kernels import ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                      # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6      # us
+
+
+def run(quick: bool = True):
+    rows = []
+    sizes = [(8, 1 << 20)] if quick else [(8, 1 << 20), (16, 1 << 22)]
+    for P, N in sizes:
+        x = jax.random.normal(jax.random.key(0), (P, N), jnp.float32)
+        w = jnp.ones((P,))
+        us_kernel = _time(lambda: aggregate_flat(x, w))
+        us_ref = _time(lambda: ref.aggregate_ref(x, w))
+        err = float(jnp.max(jnp.abs(aggregate_flat(x, w)
+                                    - ref.aggregate_ref(x, w))))
+        traffic = (P + 1) * N * 4
+        rows.append({
+            "bench": "aggregate", "P": P, "N": N,
+            "us_kernel_interp": round(us_kernel, 1),
+            "us_ref_jnp": round(us_ref, 1),
+            "max_err": err,
+            "hbm_bytes": traffic,
+            "tpu_roofline_us": round(traffic / V5E.hbm_bandwidth * 1e6, 1),
+        })
+    N = 1 << 20
+    x = jax.random.normal(jax.random.key(1), (N,))
+    us_q = _time(lambda: quantize_flat(x))
+    q, s = quantize_flat(x)
+    us_d = _time(lambda: dequantize_flat(q, s, n=N))
+    rows.append({
+        "bench": "quantize+dequantize", "P": 1, "N": N,
+        "us_kernel_interp": round(us_q + us_d, 1),
+        "us_ref_jnp": _time(lambda: ref.quantize_ref(x)),
+        "max_err": float(jnp.max(jnp.abs(dequantize_flat(q, s, n=N) - x))),
+        "hbm_bytes": N * 5 + N * 5,
+        "tpu_roofline_us": round(10 * N / V5E.hbm_bandwidth * 1e6, 1),
+    })
+    emit(rows, "kernels.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

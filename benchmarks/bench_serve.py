@@ -1,0 +1,60 @@
+"""Serving throughput: batched prefill + token-by-token decode on reduced
+configs (real CPU timings; the full configs are covered by the dry-run and
+its roofline decode rows)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro import configs
+from repro.config import MeshConfig
+from repro.core.distributed import Server
+from repro.models import build
+
+
+def _one(arch: str, batch_size: int, prompt: int, new_tokens: int):
+    cfg = configs.reduced(configs.get_config(arch))
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    n_img = cfg.image_tokens * cfg.anyres_tiles if cfg.family == "vlm" else 0
+    cache = model.init_cache(batch_size, prompt + new_tokens + n_img + 4)
+    batch = {"tokens": jax.random.randint(jax.random.key(1),
+                                          (batch_size, prompt), 0, cfg.vocab)}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.zeros((batch_size, cfg.n_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.zeros((batch_size, n_img, cfg.d_model))
+
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    logits, cache = prefill(params, batch, cache)          # compile+run
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    logits, cache = decode(params, tok, cache)             # compile decode
+
+    t0 = time.time()
+    for _ in range(new_tokens):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    return batch_size * new_tokens / dt
+
+
+def run(quick: bool = True):
+    archs = (["tinyllama-1.1b", "rwkv6-1.6b", "gemma2-27b"] if quick
+             else configs.ASSIGNED)
+    rows = []
+    for arch in archs:
+        tps = _one(arch, batch_size=4, prompt=16, new_tokens=16)
+        rows.append({"bench": "serve", "arch": arch, "batch": 4,
+                     "decode_tok_per_s_cpu_reduced": round(tps, 1)})
+    emit(rows, "serve.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+"""§Roofline reader: summarize the dry-run artifacts into the per
+(arch × shape × mesh) roofline table used by EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ARTIFACTS, emit
+
+DRYRUN_DIR = os.path.join(ARTIFACTS, "dryrun")
+
+
+def load_records(tag=""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(path)
+        if tag and f"__{tag}." not in base:
+            continue
+        if not tag and base.count("__") > 3:
+            continue                      # perf-experiment artifacts
+        with open(path) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def recompute(rec: dict) -> dict:
+    """Re-derive analytic roofline terms from a stored record (keeps the
+    table consistent with the latest repro.roofline formulas without
+    recompiling)."""
+    from repro import configs
+    from repro.config import SHAPES, MeshConfig
+    from repro.roofline import analytic_terms
+
+    cfg = configs.get_config(rec["arch"])
+    if rec.get("window", cfg.window) != cfg.window:
+        cfg = cfg.with_(window=rec["window"])
+    overrides = {k: v for k, v in rec.get("overrides", {}).items()
+                 if hasattr(cfg, k)}
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[rec["shape"]]
+    multi = rec["mesh"].count("x") == 2
+    chips = MeshConfig(multi_pod=multi).n_devices
+    coll = rec["collectives"]["total_bytes"]
+    if "per_device_bytes" not in rec["collectives"]:
+        coll *= chips          # legacy artifact: stored per-device bytes
+    return analytic_terms(
+        cfg, shape, n_participants=rec.get("participants", 1),
+        local_steps=rec.get("micro_steps", 1),
+        collective_total_bytes=coll,
+        chips=chips)
+
+
+def run(quick: bool = True):
+    recs = load_records()
+    rows = []
+    for r in recs:
+        try:
+            rl = recompute(r)
+        except Exception:
+            rl = r.get("roofline", {})
+        mem = r.get("memory", {})
+        # outputs alias donated inputs, so HBM peak ≈ args + temps
+        per_dev_gb = ((mem.get("argument_size_in_bytes", 0)
+                       + mem.get("temp_size_in_bytes", 0)) / 1e9)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "participants": r.get("participants"),
+            "compute_s": f"{rl.get('compute_s', 0):.3e}",
+            "memory_s": f"{rl.get('memory_s', 0):.3e}",
+            "collective_s": f"{rl.get('collective_s', 0):.3e}",
+            "dominant": rl.get("dominant"),
+            "model_flops": f"{rl.get('model_flops', 0):.3e}",
+            "useful_ratio": round(rl.get("useful_flop_ratio", 0), 3),
+            "per_device_gb": round(per_dev_gb, 2),
+            "fits_16gb": per_dev_gb <= 16.0,
+            "compile_s": r.get("compile_s"),
+        })
+    rows.sort(key=lambda x: (x["arch"], x["shape"], x["mesh"]))
+    emit(rows, "roofline_table.csv")
+    dom = {}
+    for r in rows:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    print(f"# dominant-term histogram: {dom}")
+    over = [f"{r['arch']}/{r['shape']}/{r['mesh']}" for r in rows
+            if not r["fits_16gb"]]
+    print(f"# over-16GB cells: {len(over)}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

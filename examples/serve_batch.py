@@ -1,0 +1,27 @@
+"""Batched serving example: prefill a batch of prompts for one of the
+assigned architectures (reduced size on CPU) and decode new tokens, the
+same jitted path the dry-run lowers at production scale.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch gemma2-27b
+    PYTHONPATH=src python examples/serve_batch.py --arch rwkv6-1.6b --new-tokens 24
+"""
+
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def main():
+    args = sys.argv[1:] or ["--arch", "tinyllama-1.1b"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    # delegate to the launch driver (examples stay thin wrappers over the
+    # public entrypoints, as a deployment would use them)
+    raise SystemExit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", *args], env=env))
+
+
+if __name__ == "__main__":
+    main()

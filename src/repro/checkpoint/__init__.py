@@ -1,0 +1,79 @@
+"""Pytree checkpointing to .npz with JSON metadata (orbax is unavailable
+offline). Keys are '/'-joined tree paths, so restore round-trips any nested
+dict/list/namedtuple structure produced by the models and optimizers.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+_NPZ_NATIVE = set("?bhilqBHILQefdgFD")
+
+
+def _flatten(tree) -> dict:
+    """npz can't store ml_dtypes (bfloat16/f8): store a bit-view plus the
+    real dtype name under a parallel '__dtype__/' key."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.char not in _NPZ_NATIVE:
+            flat["__dtype__/" + key] = np.array(str(arr.dtype))
+            arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree, meta: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    with open(_meta_path(path), "w") as fh:
+        json.dump(meta or {}, fh)
+
+
+def restore(path: str, like) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (a template pytree)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    out = []
+    for (path_elems, leaf) in paths:
+        key = "/".join(_path_str(p) for p in path_elems)
+        arr = npz[key]
+        dkey = "__dtype__/" + key
+        if dkey in npz:
+            import ml_dtypes  # ships with jax
+
+            arr = arr.view(np.dtype(str(npz[dkey])))
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"checkpoint/template shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(arr.astype(leaf.dtype))
+    meta = {}
+    mp = _meta_path(path)
+    if os.path.exists(mp):
+        with open(mp) as fh:
+            meta = json.load(fh)
+    return jax.tree_util.tree_unflatten(treedef, out), meta
+
+
+def _meta_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".meta.json"

@@ -1,0 +1,16 @@
+"""MoDeST protocol core — the paper's contribution.
+
+* :mod:`repro.core.hashing`   — deterministic sample-order hashing (Alg. 1, l.6)
+* :mod:`repro.core.registry`  — join/leave LWW registry (Alg. 2)
+* :mod:`repro.core.activity`  — unresponsive-node suppression (Alg. 3)
+* :mod:`repro.core.views`     — (C, E, N) views piggybacked on model transfers
+* :mod:`repro.core.sampling`  — mostly-consistent decentralized sampling (Alg. 1)
+* :mod:`repro.core.node`      — the full train/aggregate node (Alg. 4)
+* :mod:`repro.core.strategy`  — FedAvg / D-SGD / MoDeST as masked mesh collectives
+* :mod:`repro.core.distributed` — the pjit'd sample-parallel round step
+"""
+
+from repro.core.activity import ActivityTracker  # noqa: F401
+from repro.core.hashing import sample_order, stable_hash  # noqa: F401
+from repro.core.registry import Registry  # noqa: F401
+from repro.core.views import View  # noqa: F401

@@ -1,0 +1,40 @@
+"""Activity tracking and unresponsive-node suppression (Alg. 3).
+
+``N_i`` maps node id -> highest round in which that node is known to have
+been active. Updates are monotone (MAX-merge), so estimates behave like
+logical clocks: they can lag the true round but never lead it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from repro.core.registry import Registry
+
+
+@dataclass
+class ActivityTracker:
+    latest: Dict[str, int] = field(default_factory=dict)   # N_i: j -> k̂_j
+
+    def update(self, j: str, k_hat: int) -> None:
+        """UPDATEACTIVITY — keep the max observed round for j."""
+        self.latest[j] = max(self.latest.get(j, 0), k_hat)
+
+    def merge(self, other: "ActivityTracker") -> None:
+        for j, k in other.latest.items():
+            self.update(j, k)
+
+    def round_estimate(self) -> int:
+        """k̂ — max round observed from anyone (Alg. 2, l.25)."""
+        return max(self.latest.values(), default=0)
+
+    def candidates(self, registry: Registry, round_k: int, window: int) -> List[str]:
+        """CANDIDATES(k) — registered AND active within the last Δk rounds."""
+        return [
+            j for j, k in self.latest.items()
+            if k > (round_k - window) and registry.is_registered(j)
+        ]
+
+    def snapshot(self) -> "ActivityTracker":
+        return ActivityTracker(dict(self.latest))

@@ -1,0 +1,38 @@
+"""Deterministic hashing for sample derivation (Alg. 1, line 6).
+
+The paper concatenates node identifier and round number and sorts the hashes
+lexicographically; any collision-resistant hash works as long as *every node
+uses the same one*, so we use sha256 (Python's builtin ``hash`` is
+process-salted and would break cross-node consistency).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Iterable, List, Sequence
+
+
+def stable_hash(token: str) -> bytes:
+    return hashlib.sha256(token.encode("utf-8")).digest()
+
+
+def sample_order(candidates: Iterable[str], round_k: int) -> List[str]:
+    """Order candidates for round ``k`` by HASH(j + k), lexicographically.
+
+    Deterministic given the candidate set: two nodes with identical views
+    derive identical orders (=> identical samples); views differing in a few
+    entries yield orders differing only around those entries (=> the
+    *mostly-consistent* property, tested in tests/test_sampling.py).
+    """
+    return sorted(candidates, key=lambda j: stable_hash(f"{j}|{round_k}"))
+
+
+def select_sample(candidates: Sequence[str], round_k: int, s: int) -> List[str]:
+    """First ``s`` of the hashed order — the *optimistic* sample before
+    liveness pings (Alg. 1 pings these in parallel)."""
+    return sample_order(candidates, round_k)[:s]
+
+
+def select_aggregators(candidates: Sequence[str], round_k: int, a: int) -> List[str]:
+    """Aggregators of round ``k`` = first ``a`` of the same order (§3.6)."""
+    return sample_order(candidates, round_k)[:a]

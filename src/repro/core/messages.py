@@ -1,0 +1,99 @@
+"""Wire messages of the MoDeST protocol with byte-size accounting.
+
+Model payloads travel either as real parameter pytrees (learning
+experiments) or as an abstract byte count (protocol/network experiments at
+full published model sizes without doing the FLOPs — e.g. Table 4 rows).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+from repro.core.views import View
+from repro.utils.pytree import tree_size_bytes
+
+HEADER_BYTES = 24      # UDP/IPv8-style framing + ids + round number
+
+
+@dataclass
+class Message:
+    sender: str
+
+    def size_bytes(self) -> int:
+        return HEADER_BYTES
+
+
+@dataclass
+class Ping(Message):
+    round_k: int = 0
+
+    def size_bytes(self) -> int:
+        return HEADER_BYTES
+
+
+@dataclass
+class Pong(Message):
+    round_k: int = 0
+
+    def size_bytes(self) -> int:
+        return HEADER_BYTES
+
+
+@dataclass
+class Joined(Message):
+    node: str = ""
+    counter: int = 0
+
+    def size_bytes(self) -> int:
+        return HEADER_BYTES + 16
+
+
+@dataclass
+class Left(Message):
+    node: str = ""
+    counter: int = 0
+
+    def size_bytes(self) -> int:
+        return HEADER_BYTES + 16
+
+
+@dataclass
+class ModelPayload:
+    """Either a real pytree or an abstract size-only stand-in."""
+
+    params: Any = None
+    nbytes: Optional[int] = None
+
+    def size_bytes(self) -> int:
+        if self.nbytes is not None:
+            return self.nbytes
+        if self.params is not None:
+            return tree_size_bytes(self.params)
+        return 0
+
+
+@dataclass
+class TrainMsg(Message):
+    """Aggregator -> participant: train on this model (Alg. 4 ``train``)."""
+
+    round_k: int = 0
+    model: ModelPayload = field(default_factory=ModelPayload)
+    view: Optional[View] = None
+
+    def size_bytes(self) -> int:
+        v = self.view.size_bytes() if self.view else 0
+        return HEADER_BYTES + self.model.size_bytes() + v
+
+
+@dataclass
+class AggregateMsg(Message):
+    """Participant -> aggregator: my updated model (Alg. 4 ``aggregate``)."""
+
+    round_k: int = 0
+    model: ModelPayload = field(default_factory=ModelPayload)
+    view: Optional[View] = None
+
+    def size_bytes(self) -> int:
+        v = self.view.size_bytes() if self.view else 0
+        return HEADER_BYTES + self.model.size_bytes() + v

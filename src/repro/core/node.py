@@ -1,0 +1,299 @@
+"""The MoDeST node — Algorithms 2, 3 and 4 combined.
+
+Each node runs two logical tasks (aggregation and training) with separate
+round counters ``k_agg`` / ``k_train``, exactly as §3.6 prescribes:
+
+* ``aggregate(k, θ_j, V_j)`` — accumulate models for round ``k``; once
+  ``sf·s`` arrived, average, sample ``S^k`` and push ``train`` to it.
+* ``train(k, θ_a, V_j)`` — (re)start local training for round ``k``;
+  higher-``k`` messages cancel in-flight training; on completion, sample
+  ``A^{k+1}`` and push ``aggregate`` to the next aggregators.
+
+Views piggyback on both message kinds and are merged on receipt. Liveness
+(ping/pong) is served even mid-training. Failures are modelled by the
+network refusing delivery to ``online=False`` nodes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, List, Optional
+
+from repro.config import ModestConfig, TrainConfig
+from repro.core import messages as M
+from repro.core.activity import ActivityTracker
+from repro.core.registry import JOINED, LEFT, Registry
+from repro.core.sampling import Sampler
+from repro.core.tasks import AbstractTask, LearningTask
+from repro.core.views import View
+
+
+class ModestNode:
+    def __init__(self, node_id: str, sim, net, mcfg: ModestConfig,
+                 tcfg: TrainConfig, task: LearningTask, data=None, *,
+                 train_speed: float = 0.05,
+                 on_aggregate: Optional[Callable] = None,
+                 fixed_aggregator: Optional[str] = None):
+        self.node_id = node_id
+        self.sim = sim
+        self.net = net
+        self.mcfg = mcfg
+        self.tcfg = tcfg
+        self.task = task
+        self.data = data
+        self.train_speed = train_speed
+        self.on_aggregate = on_aggregate       # session hook: (k, params, node)
+        # FL-emulation mode (§4.3): single fixed aggregator, no sampling.
+        self.fixed_aggregator = fixed_aggregator
+
+        self.registry = Registry()
+        self.activity = ActivityTracker()
+        self.sampler = Sampler(self)
+        self.timeout = mcfg.ping_timeout
+
+        self.online = True
+        self.counter = 0                       # persistent c_i
+        self.k_agg = 0
+        self.k_train = 0
+        self._theta_list: List = []            # Θ
+        self._agg_models_done = set()          # rounds already aggregated (guard)
+        self._train_done = set()               # rounds already trained (guard)
+        self._train_handle = None              # cancellable pending training
+        self._train_round_pending = None
+        self.sample_durations: List[tuple] = []   # (t, seconds) for Fig. 6
+
+        # §3.5 auto-rejoin: a node wrongly suspected unresponsive re-joins
+        # once it has been inactive for more than Δk · (average round time).
+        self._last_active_t = 0.0
+        self._last_active_k = 0
+        self._round_time_est = 4.0 * mcfg.ping_timeout   # prior; refined online
+
+        net.register(self)
+        self._schedule_rejoin_check()
+
+    # ------------------------------------------------------------------ utils
+
+    def candidates(self, round_k: int) -> List[str]:
+        return self.activity.candidates(self.registry, round_k,
+                                        self.mcfg.activity_window)
+
+    def view(self) -> View:
+        return View.of(self.registry, self.activity)
+
+    def _sf_threshold(self) -> int:
+        return max(1, math.ceil(self.mcfg.success_fraction * self.mcfg.sample_size))
+
+    # -------------------------------------------------------------- membership
+
+    def bootstrap(self, all_ids: List[str]) -> None:
+        """Out-of-band initial view (metadata download, §4.1): everyone
+        registered with counter 1, activity 0."""
+        for j in all_ids:
+            self.registry.update(j, 1, JOINED)
+            self.activity.update(j, 0)
+        self.counter = max(self.counter, 1)
+
+    def request_join(self, peers: List[str]) -> None:
+        """Alg. 2 l.17 — advertise a joined event to s random peers."""
+        self.counter += 1
+        self.registry.update(self.node_id, self.counter, JOINED)
+        self.activity.update(self.node_id, self.activity.round_estimate())
+        for j in peers:
+            self.net.send(self.node_id, j,
+                          M.Joined(sender=self.node_id, node=self.node_id,
+                                   counter=self.counter))
+
+    def request_leave(self, peers: List[str]) -> None:
+        self.counter += 1
+        self.registry.update(self.node_id, self.counter, LEFT)
+        for j in peers:
+            self.net.send(self.node_id, j,
+                          M.Left(sender=self.node_id, node=self.node_id,
+                                 counter=self.counter))
+        self.online = False
+
+    def crash(self) -> None:
+        self.online = False
+
+    def recover(self) -> None:
+        self.online = True
+
+    # ------------------------------------------------------------- auto-rejoin
+
+    def _note_active(self, round_k: int) -> None:
+        """Record own activity and refine the per-round time estimate Δt̄."""
+        if round_k > self._last_active_k and self._last_active_k > 0:
+            dt = (self.sim.now - self._last_active_t) / (round_k - self._last_active_k)
+            if dt > 0:
+                self._round_time_est = 0.7 * self._round_time_est + 0.3 * dt
+        if round_k > self._last_active_k:
+            self._last_active_k = round_k
+            self._last_active_t = self.sim.now
+
+    def _schedule_rejoin_check(self) -> None:
+        period = max(self.mcfg.activity_window * self._round_time_est, 4 * self.timeout)
+
+        def check():
+            if self.online:
+                idle = self.sim.now - self._last_active_t
+                if idle > self.mcfg.activity_window * self._round_time_est:
+                    peers = [j for j in self.registry.registered()
+                             if j != self.node_id][: self.mcfg.sample_size]
+                    if peers:
+                        self.request_join(peers)
+                        self._last_active_t = self.sim.now
+            self._schedule_rejoin_check()
+
+        self.sim.schedule(period, check)
+
+    # ----------------------------------------------------------------- receive
+
+    def receive(self, msg: M.Message) -> None:
+        if not self.online:
+            return
+        if isinstance(msg, M.Ping):
+            self.net.send(self.node_id, msg.sender,
+                          M.Pong(sender=self.node_id, round_k=msg.round_k))
+        elif isinstance(msg, M.Pong):
+            self.sampler.on_pong(msg.round_k, msg.sender)
+        elif isinstance(msg, M.Joined):
+            applied = self.registry.update(msg.node, msg.counter, JOINED)
+            if applied:
+                self.activity.update(msg.node, self.activity.round_estimate())
+        elif isinstance(msg, M.Left):
+            self.registry.update(msg.node, msg.counter, LEFT)
+        elif isinstance(msg, M.AggregateMsg):
+            self._on_aggregate_msg(msg)
+        elif isinstance(msg, M.TrainMsg):
+            self._on_train_msg(msg)
+
+    # ------------------------------------------------------------- aggregation
+
+    def _on_aggregate_msg(self, msg: M.AggregateMsg) -> None:
+        if msg.view is not None:
+            msg.view.merge_into(self.registry, self.activity)
+        self.activity.update(self.node_id, msg.round_k)
+        self._note_active(msg.round_k)
+        k = msg.round_k
+        if k < self.k_agg or k in self._agg_models_done:
+            return                                         # stale (§3.6)
+        if k > self.k_agg:
+            self.k_agg = k
+            self._theta_list = [msg.model]
+            # Liveness guard (implementation detail, mirrors sf's purpose):
+            # if participants crash *after* being sampled, fewer than sf·s
+            # models ever arrive; aggregate what we have after a long stall
+            # instead of wedging the session (cancelled if threshold met).
+            if self._stall_handle is not None:
+                self._stall_handle.cancel()
+            self._stall_handle = self.sim.schedule(
+                30 * self.timeout, lambda: self._stall_aggregate(k))
+        else:
+            self._theta_list.append(msg.model)
+        if len(self._theta_list) >= self._sf_threshold():
+            self._do_aggregate(k)
+
+    _stall_handle = None
+
+    def _stall_aggregate(self, k: int) -> None:
+        self._stall_handle = None
+        if k == self.k_agg and k not in self._agg_models_done and self._theta_list:
+            self._do_aggregate(k)
+
+    def _do_aggregate(self, k: int) -> None:
+        self._agg_models_done.add(k)
+        if self._stall_handle is not None:
+            self._stall_handle.cancel()
+            self._stall_handle = None
+        models = self._theta_list
+        self._theta_list = []
+        if models and models[0].params is not None:
+            agg = self.task.aggregate([m.params for m in models])
+            payload = M.ModelPayload(params=agg)
+        else:
+            nbytes = models[0].nbytes if models else self.task.model_bytes()
+            payload = M.ModelPayload(params=None, nbytes=nbytes)
+        if self.on_aggregate is not None:
+            self.on_aggregate(k, payload.params, self)
+
+        t0 = self.sim.now
+
+        def send_train(sample: List[str]) -> None:
+            self.sample_durations.append((t0, self.sim.now - t0))
+            v = self.view()
+            for j in sample:
+                m = M.TrainMsg(sender=self.node_id, round_k=k,
+                               model=M.ModelPayload(params=payload.params,
+                                                    nbytes=payload.nbytes),
+                               view=v)
+                self.net.account_payload(m.model.size_bytes())
+                self.net.send(self.node_id, j, m)
+
+        self.sampler.sample(k, self.mcfg.sample_size, send_train)
+
+    # ---------------------------------------------------------------- training
+
+    def _on_train_msg(self, msg: M.TrainMsg) -> None:
+        if msg.view is not None:
+            msg.view.merge_into(self.registry, self.activity)
+        self.activity.update(self.node_id, msg.round_k)
+        self._note_active(msg.round_k)
+        k = msg.round_k
+        if k < self.k_train or k in self._train_done:
+            return                                         # stale
+        if k > self.k_train:
+            self.k_train = k
+            if self._train_handle is not None:             # CANCEL(θ̄)
+                self._train_handle.cancel()
+                self._train_handle = None
+                self._train_round_pending = None
+        if self._train_round_pending is not None:
+            return                                         # PENDING(θ̄)
+
+        duration = self.task.train_time(
+            self.data, batch_size=self.tcfg.batch_size,
+            epochs=self.mcfg.local_steps, speed=self.train_speed)
+        self._train_round_pending = k
+        incoming = msg.model
+
+        def finish() -> None:
+            self._train_handle = None
+            self._train_round_pending = None
+            if k != self.k_train or k in self._train_done:
+                return
+            self._train_done.add(k)
+            if incoming.params is not None:
+                updated = self.task.local_train(
+                    incoming.params, self.data,
+                    batch_size=self.tcfg.batch_size,
+                    epochs=self.mcfg.local_steps, seed=self.tcfg.seed + k)
+                payload = M.ModelPayload(params=updated)
+            else:
+                payload = M.ModelPayload(params=None, nbytes=incoming.nbytes)
+
+            def send_agg(aggs: List[str]) -> None:
+                v = self.view()
+                for j in aggs:
+                    m = M.AggregateMsg(sender=self.node_id, round_k=k + 1,
+                                       model=M.ModelPayload(params=payload.params,
+                                                            nbytes=payload.nbytes),
+                                       view=v)
+                    self.net.account_payload(m.model.size_bytes())
+                    self.net.send(self.node_id, j, m)
+
+            if self.fixed_aggregator is not None:          # FL emulation
+                send_agg([self.fixed_aggregator])
+            else:
+                self.sampler.sample(k + 1, self.mcfg.n_aggregators, send_agg)
+
+        self._train_handle = self.sim.schedule(duration, finish)
+
+    # ----------------------------------------------------------------- kickoff
+
+    def self_activate(self, round_k: int, init_params) -> None:
+        """Round-1 bootstrap (Alg. 4 l.6-8): a node that finds itself in S^1
+        sends itself the initial model."""
+        payload = (M.ModelPayload(params=init_params) if init_params is not None
+                   else M.ModelPayload(nbytes=self.task.model_bytes()))
+        self.receive(M.TrainMsg(sender=self.node_id, round_k=round_k,
+                                model=payload, view=self.view()))

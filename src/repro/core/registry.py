@@ -1,0 +1,61 @@
+"""Membership registry (Alg. 2) — a last-writer-wins dictionary CRDT.
+
+Each node ``i`` keeps, for every known node ``j``, the most recent
+``joined``/``left`` event together with the per-node persistent counter
+``c_j`` that ordered it. Merging keeps the higher-counter event, making
+merge commutative, associative and idempotent (property-tested).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+JOINED = "joined"
+LEFT = "left"
+
+
+@dataclass
+class Registry:
+    events: Dict[str, str] = field(default_factory=dict)    # E_i: j -> event
+    counters: Dict[str, int] = field(default_factory=dict)  # C_i: j -> c_j
+
+    def update(self, j: str, c_j: int, event: str) -> bool:
+        """UPDATEREGISTRY — apply iff newer. Returns True if applied.
+
+        Counters are bumped only by node j itself (Alg. 2), so equal
+        counters with different events cannot arise in a faithful run;
+        still, merges must converge under arbitrary inputs, so ties break
+        deterministically toward 'left' (the safe state).
+        """
+        if j not in self.counters or self.counters[j] < c_j:
+            self.events[j] = event
+            self.counters[j] = c_j
+            return True
+        if self.counters[j] == c_j and event == LEFT and self.events[j] == JOINED:
+            self.events[j] = LEFT
+            return True
+        return False
+
+    def merge(self, other: "Registry") -> int:
+        """MERGEREGISTRY — LWW union; returns number of entries updated."""
+        n = 0
+        for j, c_j in other.counters.items():
+            n += self.update(j, c_j, other.events[j])
+        return n
+
+    def registered(self) -> List[str]:
+        """Nodes whose latest event is 'joined' (Alg. 2, REGISTERED)."""
+        return [j for j, e in self.events.items() if e == JOINED]
+
+    def is_registered(self, j: str) -> bool:
+        return self.events.get(j) == JOINED
+
+    def snapshot(self) -> "Registry":
+        return Registry(dict(self.events), dict(self.counters))
+
+    def items(self) -> List[Tuple[str, int, str]]:
+        return [(j, self.counters[j], self.events[j]) for j in self.counters]
+
+    def __len__(self):
+        return len(self.counters)

@@ -1,0 +1,138 @@
+"""Decentralized sampling of active nodes (Alg. 1).
+
+``Sampler`` is the per-node implementation: it derives the hashed candidate
+order, optimistically pings the first ``s`` in parallel, then walks the tail
+one-by-one for missing replies, retrying whole rounds while the network is
+asynchronous. Completion is continuation-style (the simulator has no
+blocking await): ``sample(k, s, cont)`` calls ``cont(live_nodes)`` once
+``s`` live nodes replied (or all candidates were exhausted — see note).
+
+Deviation note: when fewer than ``s`` candidates exist at all (e.g. after
+the Fig. 6 crash of 80 % of nodes with small populations), the paper's
+Alg. 1 retries forever until membership recovers; we additionally resolve
+with all live candidates if at least ``min_fraction`` of ``s`` replied after
+a full pass, which matches the deployed behaviour described in §4.7 (rounds
+continue with the 20 surviving nodes).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+from repro.core import messages as M
+from repro.core.hashing import sample_order
+
+
+@dataclass
+class _PendingSample:
+    round_k: int
+    size: int
+    cont: Callable[[List[str]], None]
+    order: List[str]
+    replied: List[str] = field(default_factory=list)   # L[k], arrival order
+    pinged: Set[str] = field(default_factory=set)
+    next_idx: int = 0
+    done: bool = False
+    retries: int = 0
+
+
+class Sampler:
+    """One per node; owns Alg. 1 state. The node routes Pongs here."""
+
+    MAX_RETRIES = 8          # sim guard for permanently-dead populations
+    MIN_FRACTION = 0.5       # resolve with >= this fraction after exhaustion
+
+    def __init__(self, node):
+        self.node = node                 # needs .node_id .sim .net .candidates(k)
+        self._pending: Dict[int, _PendingSample] = {}
+
+    # -- public ---------------------------------------------------------------
+
+    def sample(self, round_k: int, size: int, cont: Callable[[List[str]], None]) -> None:
+        cands = self.node.candidates(round_k)
+        order = sample_order(cands, round_k)
+        st = _PendingSample(round_k, size, cont, order)
+        self._pending[round_k] = st
+        if not order:
+            self._retry_later(st)
+            return
+        # Optimistically ping the first s in parallel (Alg. 1, l.10-12).
+        for j in order[:size]:
+            self._ping(st, j)
+        st.next_idx = min(size, len(order))
+        self.node.sim.schedule(self.node.timeout, lambda: self._deadline(st))
+
+    def on_pong(self, round_k: int, j: str) -> None:
+        st = self._pending.get(round_k)
+        if st is None or st.done:
+            return
+        if j not in st.replied:
+            st.replied.append(j)                       # L[k].add(j)
+        if len(st.replied) >= st.size:
+            self._resolve(st)
+
+    # -- internals --------------------------------------------------------------
+
+    def _ping(self, st: _PendingSample, j: str) -> None:
+        st.pinged.add(j)
+        if j == self.node.node_id:
+            # A node is trivially live to itself; the paper's nodes also
+            # ping themselves (loopback), we short-circuit the wire.
+            self.node.sim.schedule(0.0, lambda: self.on_pong(st.round_k, j))
+            return
+        self.node.net.send(self.node.node_id, j,
+                           M.Ping(sender=self.node.node_id, round_k=st.round_k))
+
+    def _deadline(self, st: _PendingSample) -> None:
+        """Δt passed for the optimistic batch: walk the tail sequentially."""
+        if st.done:
+            return
+        if len(st.replied) >= st.size:
+            self._resolve(st)
+            return
+        self._advance(st)
+
+    def _advance(self, st: _PendingSample) -> None:
+        if st.done:
+            return
+        if len(st.replied) >= st.size:
+            self._resolve(st)
+            return
+        if st.next_idx >= len(st.order):
+            # Whole candidate list exhausted (Alg. 1 l.21 retries; see
+            # module docstring for the small-population resolution rule).
+            need = max(1, int(st.size * self.MIN_FRACTION))
+            if len(st.replied) >= min(need, len(st.order)):
+                self._resolve(st)
+            else:
+                self._retry_later(st)
+            return
+        j = st.order[st.next_idx]
+        st.next_idx += 1
+        if j in st.pinged:
+            self.node.sim.schedule(0.0, lambda: self._advance(st))
+            return
+        self._ping(st, j)
+        self.node.sim.schedule(self.node.timeout, lambda: self._advance(st))
+
+    def _retry_later(self, st: _PendingSample) -> None:
+        st.retries += 1
+        if st.retries > self.MAX_RETRIES:
+            st.done = True
+            self._pending.pop(st.round_k, None)
+            st.cont(list(st.replied))                  # best effort
+            return
+
+        def again():
+            if st.done:
+                return
+            self._pending.pop(st.round_k, None)
+            self.sample(st.round_k, st.size, st.cont)
+
+        self.node.sim.schedule(self.node.timeout, again)
+
+    def _resolve(self, st: _PendingSample) -> None:
+        st.done = True
+        self._pending.pop(st.round_k, None)
+        st.cont(st.replied[:st.size])                  # L[k].HEAD(s)

@@ -1,0 +1,129 @@
+"""Aggregation strategies as mesh collectives.
+
+The protocol-form of MoDeST moves models over UDP; the mesh-form expresses
+the *same math* as collectives over the participant axis, so the three
+algorithms compared in the paper lower to *different collectives*:
+
+* ``modest`` / ``fedavg`` — masked weighted mean over all participant
+  replicas + broadcast (⇒ all-reduce on the participant axis). The mask
+  carries MoDeST's ``sf`` semantics: failed/straggler slots get weight 0.
+  ``fedavg`` differs only by an optional server optimizer (FedYogi/FedAdam,
+  paper §5) applied to the aggregated pseudo-gradient.
+* ``dsgd``  — one-peer exponential-graph pairwise averaging
+  (⇒ collective-permute on the participant axis) — every slot communicates
+  every round, the paper's D-SGD baseline.
+* ``local`` — no mixing (ablation lower bound).
+
+All strategies are pure functions on stacked (P, ...) parameter pytrees and
+are jit/GSPMD-friendly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.config import TrainConfig
+
+
+class Strategy(NamedTuple):
+    name: str
+    init_state: Any          # () -> server-opt state (or ())
+    mix: Any                 # (prev_P, new_P, weights, state, hop) -> (P-tree, state)
+
+
+def _weighted_mean_bcast(trees_P, weights, agg_dtype=jnp.float32):
+    """Masked weighted mean over the leading P axis, broadcast back to P.
+
+    ``agg_dtype`` sets the dtype of the cross-participant reduction — and
+    therefore of the all-reduce on the wire (§Perf: bfloat16 halves it;
+    the per-leaf scale w/Σw is applied *before* reducing so bf16 stays in
+    a well-conditioned range).
+    """
+    w = weights.astype(jnp.float32)
+    total = jnp.maximum(jnp.sum(w), 1e-9)
+    wn = (w / total).astype(agg_dtype)
+
+    def leaf(x):
+        avg = jnp.tensordot(wn, x.astype(agg_dtype), axes=(0, 0))
+        return jnp.broadcast_to(avg[None], x.shape).astype(x.dtype)
+
+    return jax.tree.map(leaf, trees_P)
+
+
+def _mean_P(tree_P):
+    return jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0), tree_P)
+
+
+def modest_strategy(tcfg: TrainConfig, template=None) -> Strategy:
+    """MoDeST aggregation (also FedAvg's math when weights are the server's
+    sample mask). With ``server_optimizer != 'avg'`` the aggregators apply a
+    FedYogi/FedAdam-style update to Δ = avg(θ_new) − θ_prev (paper §5)."""
+    use_server_opt = tcfg.server_optimizer not in ("avg", "sgd")
+    sopt = optim.build(tcfg, server=True) if use_server_opt else None
+    agg_dtype = jnp.dtype(tcfg.agg_dtype)
+
+    def init_state(params_P=None):
+        if not use_server_opt:
+            return ()
+        assert params_P is not None
+        g = _mean_P(params_P)
+        return sopt.init(g)
+
+    def mix(prev_P, new_P, weights, state, hop=1):
+        if not use_server_opt:
+            return _weighted_mean_bcast(new_P, weights, agg_dtype), state
+        w = weights.astype(jnp.float32)
+        total = jnp.maximum(jnp.sum(w), 1e-9)
+        prev_g = _mean_P(prev_P)                    # replicas equal pre-round
+        avg = jax.tree.map(
+            lambda x: jnp.tensordot(w, x.astype(jnp.float32), axes=(0, 0)) / total,
+            new_P)
+        # pseudo-gradient: server descends on -(avg - prev)
+        pseudo = jax.tree.map(lambda a, p: -(a - p), avg, prev_g)
+        upd, state = sopt.update(pseudo, state, prev_g)
+        new_g = optim.apply_updates(prev_g, upd)
+        out = jax.tree.map(
+            lambda g, x: jnp.broadcast_to(g[None], x.shape).astype(x.dtype),
+            new_g, new_P)
+        return out, state
+
+    return Strategy("modest", init_state, mix)
+
+
+def dsgd_strategy(tcfg: TrainConfig) -> Strategy:
+    """One-peer exponential graph: slot p averages with slot (p+hop) mod P.
+    ``jnp.roll`` on the participant-sharded axis lowers to a
+    collective-permute — D-SGD's per-round neighbour exchange."""
+
+    def mix(prev_P, new_P, weights, state, hop=1):
+        del prev_P, weights
+        mixed = jax.tree.map(
+            lambda x: (0.5 * (x.astype(jnp.float32)
+                              + jnp.roll(x.astype(jnp.float32), -hop, axis=0))
+                       ).astype(x.dtype),
+            new_P)
+        return mixed, state
+
+    return Strategy("dsgd", lambda params_P=None: (), mix)
+
+
+def local_strategy(tcfg: TrainConfig) -> Strategy:
+    def mix(prev_P, new_P, weights, state, hop=1):
+        return new_P, state
+
+    return Strategy("local", lambda params_P=None: (), mix)
+
+
+def build_strategy(name: str, tcfg: TrainConfig) -> Strategy:
+    if name in ("modest", "fedavg"):
+        s = modest_strategy(tcfg)
+        return Strategy(name, s.init_state, s.mix)
+    if name == "dsgd":
+        return dsgd_strategy(tcfg)
+    if name == "local":
+        return local_strategy(tcfg)
+    raise ValueError(f"unknown strategy {name!r}")

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for MoDeST's perf-critical layers.
+
+The paper's compute hot spot is the aggregator: averaging ``sf·s`` incoming
+models (an HBM-bandwidth-bound streaming reduction) every round. Beyond-
+paper, model *deltas* are int8-quantized before the aggregation collective
+(EXPERIMENTS.md §Perf).
+
+* :mod:`repro.kernels.aggregate` — tiled weighted multi-model average
+* :mod:`repro.kernels.quantize` — per-tile int8 delta quant/dequant
+* :mod:`repro.kernels.flash_attention` — blocked online-softmax GQA
+  attention (the §Perf follow-up: removes the fp32 score buffers)
+* :mod:`repro.kernels.ops`      — jit'd pytree-level wrappers (public API)
+* :mod:`repro.kernels.ref`      — pure-jnp oracles (tests assert allclose)
+
+Kernels target TPU (pl.pallas_call + explicit BlockSpec VMEM tiling) and
+are validated on CPU in interpret mode.
+"""
+
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    aggregate_flat,
+    aggregate_pytree,
+    dequantize_flat,
+    quantize_flat,
+    quantized_delta_pull,
+    quantized_delta_push,
+)

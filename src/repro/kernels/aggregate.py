@@ -1,0 +1,49 @@
+"""Weighted multi-model aggregation kernel (the MoDeST aggregator hot spot).
+
+Computes ``out = Σ_p w_p · x_p / Σ_p w_p`` over ``P`` stacked model
+replicas, streaming tiles of the flattened parameter vector through VMEM
+with fp32 accumulation.
+
+Tiling: grid over the parameter axis in ``TILE`` lanes; each step holds a
+``(P, TILE)`` block in VMEM (P ≤ 16, TILE = 16384 → ≤ 1 MiB bf16, well
+under the ~16 MiB VMEM budget with double buffering). The weight vector is
+small and replicated to every grid step. TILE is a multiple of the 128-lane
+register width; the MXU is not involved (pure VPU reduction) — this kernel
+is HBM-bandwidth-bound by design, matching the roofline's memory term.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 16384
+
+
+def _agg_kernel(w_ref, x_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)                 # (P, 1)
+    x = x_ref[...].astype(jnp.float32)                 # (P, TILE)
+    total = jnp.maximum(jnp.sum(w), 1e-9)
+    acc = jnp.sum(x * w, axis=0) / total               # (TILE,)
+    o_ref[...] = acc.astype(o_ref.dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def aggregate_tiles(x, w, *, interpret: bool = False):
+    """x: (P, N) with N a multiple of TILE; w: (P,). Returns (N,)."""
+    P, N = x.shape
+    grid = (N // TILE,)
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((P, 1), lambda i: (0, 0)),    # weights, every step
+            pl.BlockSpec((P, TILE), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, N), x.dtype),
+        interpret=interpret,
+    )(w[:, None], x)[0]

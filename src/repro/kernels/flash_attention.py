@@ -1,0 +1,107 @@
+"""Blocked (flash-style) causal GQA attention kernel.
+
+§Perf identified fp32 attention-score buffers (B·S_q·H·S_k per layer) as
+the dominant residual memory term after the hillclimbs (tinyllama chip:
+16.2 GB temp; qwen3 repattn: 38 GB). This kernel computes attention with
+online softmax over KV blocks, so scores never materialize beyond a
+(BLOCK_Q, BLOCK_K) tile in VMEM.
+
+Layout (one (batch·kv-head·q-group, q-block) program per grid step):
+  q: (B, H, S, hd) — grid over (B·H, S/BLOCK_Q)
+  inner fori_loop over ceil(S/BLOCK_K) KV blocks with running (m, l, acc)
+  causal masking prunes nothing structurally (full blocks past the
+  diagonal contribute zero weight via -inf masking; a production version
+  would skip them in the grid).
+
+VMEM per step: q tile (BLOCK_Q·hd) + kv tiles (2·BLOCK_K·hd) + acc
+(BLOCK_Q·hd f32) + scores tile (BLOCK_Q·BLOCK_K f32) ≈ 0.6 MiB at the
+default 128/512 blocks — far under budget, MXU-aligned (multiples of 128).
+
+Validated against ``ref.flash_attention_ref`` (pure-jnp full softmax) in
+interpret mode across shapes/dtypes (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128
+BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool):
+    # q_ref: (1, BLOCK_Q, hd); k_ref/v_ref: (1, S, hd); o_ref: (1, BLOCK_Q, hd)
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                     # (BQ, hd)
+    S = k_ref.shape[1]
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    n_blocks = S // block_k
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = jax.lax.dynamic_slice(k_ref[0], (j * block_k, 0),
+                                  (block_k, hd)).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(v_ref[0], (j * block_k, 0),
+                                  (block_k, hd)).astype(jnp.float32)
+        s = (q @ k.T) * scale                            # (BQ, BK)
+        if causal:
+            qpos = qi * q.shape[0] + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc
+
+    m0 = jnp.full((q.shape[0],), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q.shape[0],), jnp.float32)
+    acc0 = jnp.zeros_like(q)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = BLOCK_Q,
+                    block_k: int = BLOCK_K, interpret: bool = False):
+    """q: (B, Hq, S, hd); k/v: (B, Hkv, S, hd) with Hq % Hkv == 0.
+
+    GQA is handled by repeating each kv head over its query group at the
+    BlockSpec level (the index map reads the same kv head for the whole
+    group — no materialized repeat).
+    """
+    B, Hq, S, hd = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+
+    grid = (B * Hq, S // block_q)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, block_k=block_k, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd),
+                         lambda bh, i: (bh, i, 0)),
+            pl.BlockSpec((1, S, hd),
+                         lambda bh, i, g=group: (bh // g, 0, 0)),
+            pl.BlockSpec((1, S, hd),
+                         lambda bh, i, g=group: (bh // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, i: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, S, hd), q.dtype),
+        interpret=interpret,
+    )(q.reshape(B * Hq, S, hd), k.reshape(B * Hkv, S, hd),
+      v.reshape(B * Hkv, S, hd)).reshape(B, Hq, S, hd)

@@ -1,0 +1,94 @@
+"""Jit'd public wrappers: pad to tile size, run the Pallas kernel, unpad.
+
+``interpret`` defaults to True on CPU backends (this container) and False
+on TPU, so the same call sites work in tests and production.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.aggregate import TILE, aggregate_tiles
+from repro.kernels.quantize import dequantize_tiles, quantize_tiles
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to_tile(x_flat):
+    n = x_flat.shape[-1]
+    pad = (-n) % TILE
+    if pad:
+        x_flat = jnp.pad(x_flat, [(0, 0)] * (x_flat.ndim - 1) + [(0, pad)])
+    return x_flat, n
+
+
+def aggregate_flat(x, w, *, interpret=None):
+    """x: (P, N) stacked flattened models; w: (P,). Weighted mean (N,)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    xp, n = _pad_to_tile(x)
+    return aggregate_tiles(xp, w, interpret=interpret)[:n]
+
+
+def aggregate_pytree(models, weights, *, interpret=None):
+    """MoDeST aggregation over a list of model pytrees via the kernel.
+
+    Drop-in replacement for ``tree_weighted_mean`` (the protocol core's
+    reference path); used by the node when kernel aggregation is enabled.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    w = jnp.asarray(weights, jnp.float32)
+
+    def leaf(*xs):
+        stacked = jnp.stack([jnp.ravel(x) for x in xs])
+        out = aggregate_flat(stacked, w, interpret=interpret)
+        return out.reshape(xs[0].shape).astype(xs[0].dtype)
+
+    return jax.tree.map(leaf, *models)
+
+
+def quantize_flat(x, *, interpret=None):
+    """x: (N,) -> (int8 codes (N,), per-tile scales); N padded internally."""
+    interpret = _default_interpret() if interpret is None else interpret
+    xp, n = _pad_to_tile(x[None])
+    q, s = quantize_tiles(xp[0], interpret=interpret)
+    return q[:n], s
+
+
+def dequantize_flat(q, s, n=None, *, dtype=jnp.float32, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    qp, n_orig = _pad_to_tile(q[None])
+    out = dequantize_tiles(qp[0], s, dtype=dtype, interpret=interpret)
+    return out[: (n if n is not None else n_orig)]
+
+
+def quantized_delta_push(theta, theta_ref, *, interpret=None):
+    """Beyond-paper compressed model push: int8(θ − θ_ref) + scales.
+
+    Returns (codes_tree, scales_tree); reconstruct with
+    :func:`quantized_delta_pull`. Wire size ≈ params × 1 byte + 4/TILE.
+    """
+    def leaf(t, r):
+        d = (t.astype(jnp.float32) - r.astype(jnp.float32)).ravel()
+        return quantize_flat(d, interpret=interpret)
+
+    pairs = jax.tree.map(leaf, theta, theta_ref)
+    codes = jax.tree.map(lambda p: p[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree.map(lambda p: p[1], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return codes, scales
+
+
+def quantized_delta_pull(codes, scales, theta_ref, *, interpret=None):
+    def leaf(q, s, r):
+        d = dequantize_flat(q, s, n=int(np.prod(r.shape)),
+                            interpret=interpret)
+        return (r.astype(jnp.float32) + d.reshape(r.shape)).astype(r.dtype)
+
+    return jax.tree.map(leaf, codes, scales, theta_ref)

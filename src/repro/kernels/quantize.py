@@ -1,0 +1,77 @@
+"""Int8 delta quantization kernels (beyond-paper model-push compression).
+
+Participants push ``θ_i − θ_agg`` instead of ``θ_i``; the delta is
+symmetric-int8 quantized with one fp32 scale per TILE lanes, shrinking the
+aggregation collective ~2× (bf16) / 4× (f32). §4.4 of the paper suggests
+compression as the lever for its remaining overhead; this implements it at
+kernel level.
+
+Each grid step loads a ``(1, TILE)`` block in VMEM, computes the tile's
+absmax scale, rounds-to-nearest, and writes int8 codes + the scale. The
+dequant kernel reverses it. Round-trip error ≤ scale/2 per element
+(property-tested against the ref oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 16384
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                  # (1, TILE)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = jnp.full(s_ref.shape, scale, jnp.float32)
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    s = s_ref[0, 0]
+    o_ref[...] = (q * s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_tiles(x, *, interpret: bool = False):
+    """x: (N,) with N multiple of TILE -> (codes int8 (N,), scales (N/TILE,))."""
+    N = x.shape[0]
+    grid = (N // TILE,)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, TILE), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((1, TILE), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, N), jnp.int8),
+            jax.ShapeDtypeStruct((1, N // TILE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x[None])
+    return q[0], s[0]
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "interpret"))
+def dequantize_tiles(q, s, *, dtype=jnp.float32, interpret: bool = False):
+    N = q.shape[0]
+    grid = (N // TILE,)
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TILE), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, N), dtype),
+        interpret=interpret,
+    )(q[None], s[None])
+    return out[0]

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every kernel (tests assert allclose against these)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TILE = 16384     # must match aggregate.TILE / quantize.TILE
+
+
+def aggregate_ref(x, w):
+    """x: (P, N); w: (P,) -> (N,) weighted mean, fp32 accumulation."""
+    wf = w.astype(jnp.float32)
+    total = jnp.maximum(jnp.sum(wf), 1e-9)
+    out = jnp.tensordot(wf, x.astype(jnp.float32), axes=(0, 0)) / total
+    return out.astype(x.dtype)
+
+
+def quantize_ref(x):
+    """x: (N,) -> (codes int8 (N,), scales f32 (N/TILE,)), per-tile absmax."""
+    N = x.shape[0]
+    t = x.astype(jnp.float32).reshape(N // TILE, TILE)
+    scales = jnp.maximum(jnp.max(jnp.abs(t), axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(t / scales[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(N), scales
+
+
+def dequantize_ref(q, s, dtype=jnp.float32):
+    N = q.shape[0]
+    t = q.astype(jnp.float32).reshape(N // TILE, TILE) * s[:, None]
+    return t.reshape(N).astype(dtype)
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """Full-softmax GQA attention oracle. q: (B,Hq,S,hd); k/v: (B,Hkv,S,hd)."""
+    B, Hq, S, hd = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsh,bkth->bkgst", qg, kf) * hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,bkth->bkgsh", p, vf)
+    return out.reshape(B, Hq, S, hd).astype(q.dtype)

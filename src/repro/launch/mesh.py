@@ -1,0 +1,33 @@
+"""Production mesh construction (brief §MULTI-POD DRY-RUN).
+
+A function — not a module-level constant — so importing this module never
+touches jax device state; the dry-run sets
+``xla_force_host_platform_device_count`` before the first jax call.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Axis types are Auto (classic GSPMD propagation): the framework supplies
+    in/out shardings + a few activation constraints and lets the partitioner
+    fill in the rest.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MeshConfig(multi_pod=multi_pod)
+
+
+def make_mesh_from_config(mesh_cfg: MeshConfig):
+    return jax.make_mesh(mesh_cfg.shape, mesh_cfg.axes)

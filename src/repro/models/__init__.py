@@ -1,0 +1,66 @@
+"""Model zoo: every assigned architecture as pure-JAX init/apply functions.
+
+``build(cfg)`` dispatches on ``cfg.family`` and returns a :class:`Model`
+bundle with a uniform interface used by the trainer, the server, and the
+dry-run driver:
+
+    init(key)                          -> params
+    loss_fn(params, batch)             -> (loss, metrics)      # train shapes
+    init_cache(batch, max_len)         -> cache                # decode shapes
+    prefill(params, batch, cache)      -> (logits, cache)
+    decode_step(params, token, cache)  -> (logits, cache)      # one new token
+
+All transformers scan over stacked per-layer parameters so HLO size is
+independent of depth.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from repro.config import ModelConfig
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense",):
+        from repro.models import transformer as m
+    elif cfg.family == "moe":
+        from repro.models import moe as m
+    elif cfg.family == "ssm":
+        from repro.models import rwkv as m
+    elif cfg.family == "hybrid":
+        from repro.models import hymba as m
+    elif cfg.family == "audio":
+        from repro.models import whisper as m
+    elif cfg.family == "vlm":
+        from repro.models import llava as m
+    elif cfg.family == "cnn":
+        from repro.models import cnn as m
+    elif cfg.family == "mf":
+        from repro.models import mf as m
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return Model(
+        cfg=cfg,
+        init=lambda key: m.init(key, cfg),
+        loss_fn=lambda params, batch: m.loss_fn(params, cfg, batch),
+        init_cache=getattr(m, "init_cache", _no_cache)
+        and (lambda batch, max_len: m.init_cache(cfg, batch, max_len)),
+        prefill=getattr(m, "prefill", None)
+        and (lambda params, batch, cache: m.prefill(params, cfg, batch, cache)),
+        decode_step=getattr(m, "decode_step", None)
+        and (lambda params, token, cache: m.decode_step(params, cfg, token, cache)),
+    )
+
+
+def _no_cache(*_a, **_k):
+    raise NotImplementedError("this family has no decode cache")

@@ -1,0 +1,60 @@
+"""The paper's CNN image classifier (LeNet-style; MoDeST Table 3).
+
+Pure-JAX conv net used by the protocol-form experiments (Figs. 3–6) —
+~350 KB of parameters at CIFAR shape, matching the paper's "CNN (LeNet)".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init(key, cfg):
+    H, W, C = cfg.cnn_image
+    c1, c2 = cfg.cnn_channels
+    ks = jax.random.split(key, 5)
+    # two 5x5 convs + 2x2 pools -> spatial reduction by 4 (same padding)
+    flat = (H // 4) * (W // 4) * c2
+    return {
+        "conv1": (jax.random.normal(ks[0], (5, 5, C, c1)) * 0.1).astype(jnp.float32),
+        "b1": jnp.zeros((c1,), jnp.float32),
+        "conv2": (jax.random.normal(ks[1], (5, 5, c1, c2)) * 0.1).astype(jnp.float32),
+        "b2": jnp.zeros((c2,), jnp.float32),
+        "fc1": L.dense_init(ks[2], (flat, 120), jnp.float32),
+        "fc2": L.dense_init(ks[3], (120, 84), jnp.float32),
+        "out": L.dense_init(ks[4], (84, cfg.cnn_classes), jnp.float32),
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + b[None, None, None, :])
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def apply(params, cfg, x):
+    x = _conv(x, params["conv1"], params["b1"])
+    x = _pool(x)
+    x = _conv(x, params["conv2"], params["b2"])
+    x = _pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"])
+    x = jax.nn.relu(x @ params["fc2"])
+    return x @ params["out"]
+
+
+def loss_fn(params, cfg, batch):
+    logits = apply(params, cfg, batch["x"])
+    labels = batch["y"].astype(jnp.int32)
+    loss = L.softmax_xent(logits[:, None, :], labels[:, None])
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}

@@ -1,0 +1,260 @@
+"""Hymba (hymba-1.5b) — hybrid-head blocks: attention and Mamba-style
+selective-SSM heads run *in parallel* on the same input, their outputs
+normalized and averaged (Hymba §2; meta-tokens omitted as orthogonal).
+
+* attention branch: GQA with sliding window (Hymba uses SWA on most layers)
+* mamba branch: depthwise causal conv (width ``ssm_conv``) → selective scan
+  with data-dependent (Δ, B, C), diagonal A, skip D, silu gate
+* decode state: KV cache (window-bounded) + conv tail + SSM state — the
+  SSM state is O(1), so ``long_500k`` runs natively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+DT_RANK = 64
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    di = d                                   # d_inner = d_model
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": L.dense_init(ks[0], (d, 2 * di), dt),
+        "conv": (jax.random.normal(ks[1], (cfg.ssm_conv, di)) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "dt_proj": L.dense_init(ks[2], (di, DT_RANK), dt),
+        "dt_up": L.dense_init(ks[3], (DT_RANK, di), dt),
+        "dt_bias": jnp.full((di,), -4.6, dt),        # softplus ≈ 0.01
+        "bc_proj": L.dense_init(ks[4], (di, 2 * N), dt),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), dt),
+        "out_proj": L.dense_init(ks[5], (di, d), dt),
+    }
+
+
+def block_init(key, cfg):
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.rms_norm_init(cfg.d_model, dt),
+        "attn": L.attention_init(k1, cfg, dt),
+        "mamba": mamba_init(k2, cfg),
+        "attn_out_norm": L.rms_norm_init(cfg.d_model, dt),
+        "mamba_out_norm": L.rms_norm_init(cfg.d_model, dt),
+        "ln2": L.rms_norm_init(cfg.d_model, dt),
+        "mlp": L.swiglu_init(k3, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def init(key, cfg):
+    dt = _dtype(cfg)
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: block_init(k, cfg))(layer_keys)
+    return {
+        "embed": L.embed_init(ke, cfg.vocab, cfg.d_model, dt),
+        "layers": layers,
+        "final_norm": L.rms_norm_init(cfg.d_model, dt),
+        "lm_head": L.dense_init(kh, (cfg.d_model, cfg.vocab), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mamba branch
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(p, x, tail=None):
+    """Depthwise causal conv. x: (B,T,di); tail: (B,W-1,di) carried state.
+    Returns (y, new_tail)."""
+    W = p["conv"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)              # (B, T+W-1, di)
+    # windowed sum: y_t = sum_w conv[w] * x_{t-W+1+w}
+    y = sum(xp[:, w:w + x.shape[1], :] * p["conv"][w][None, None, :]
+            for w in range(W))
+    new_tail = xp[:, -(W - 1):, :] if W > 1 else tail
+    return y + p["conv_b"][None, None, :], new_tail
+
+
+def _ssm_scan(p, x, state):
+    """Selective scan. x: (B,T,di) post-conv; state: (B,di,N) fp32."""
+    dtv = jax.nn.softplus((x @ p["dt_proj"]) @ p["dt_up"]
+                          + p["dt_bias"][None, None, :]).astype(jnp.float32)
+    N = p["a_log"].shape[1]
+    bc = x @ p["bc_proj"]
+    Bm, Cm = bc[..., :N].astype(jnp.float32), bc[..., N:].astype(jnp.float32)
+    A = -jnp.exp(p["a_log"])                              # (di,N), negative
+    xT = jnp.moveaxis(x, 1, 0).astype(jnp.float32)
+    dT = jnp.moveaxis(dtv, 1, 0)
+    BT = jnp.moveaxis(Bm, 1, 0)
+    CT = jnp.moveaxis(Cm, 1, 0)
+
+    def step(h, xs):
+        x_t, dt_t, b_t, c_t = xs
+        dA = jnp.exp(dt_t[..., None] * A[None])           # (B,di,N)
+        h = dA * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    state, y = jax.lax.scan(step, state, (xT, dT, BT, CT))
+    y = jnp.moveaxis(y, 0, 1)                             # (B,T,di)
+    return y + p["d_skip"][None, None, :].astype(jnp.float32) * \
+        jnp.moveaxis(xT, 0, 1), state
+
+
+def mamba_branch(p, x, mstate):
+    """mstate: {'conv': (B,W-1,di), 'ssm': (B,di,N) fp32}."""
+    xz = x @ p["in_proj"]
+    di = xz.shape[-1] // 2
+    xin, z = xz[..., :di], xz[..., di:]
+    xc, conv_tail = _causal_conv(p, xin, mstate["conv"])
+    xc = jax.nn.silu(xc)
+    y, ssm = _ssm_scan(p, xc, mstate["ssm"])
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y, {"conv": conv_tail, "ssm": ssm}
+
+
+# ---------------------------------------------------------------------------
+# model interface
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_block(p, cfg, x, positions, mask, mstate, decode_cache=None,
+                  pos=None, valid=None):
+    xn = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+    if decode_cache is None:
+        a = L.attention(p["attn"], xn, cfg, positions=positions, mask=mask)
+        new_kv = None
+    else:
+        ck, cv = decode_cache
+        a, ck, cv = T._attention_decode_masked(p["attn"], xn, ck, cv, pos,
+                                               cfg, valid)
+        new_kv = (ck, cv)
+    m, mstate = mamba_branch(p["mamba"], xn, mstate)
+    fused = 0.5 * (L.rms_norm(p["attn_out_norm"], a, cfg.norm_eps)
+                   + L.rms_norm(p["mamba_out_norm"], m, cfg.norm_eps))
+    x = x + fused
+    h = L.swiglu(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps))
+    return x + h, mstate, new_kv
+
+
+def _zero_mstates(cfg, B):
+    di, N, W = cfg.d_model, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((cfg.n_layers, B, W - 1, di), _dtype(cfg)),
+        "ssm": jnp.zeros((cfg.n_layers, B, di, N), jnp.float32),
+    }
+
+
+def loss_fn(params, cfg, batch):
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    mask = L.causal_mask(S, S, window=cfg.window)
+    positions = jnp.arange(S)
+    ms = _zero_mstates(cfg, B)
+
+    def block(x, scanned):
+        p, conv, ssm = scanned
+        x, _, _ = _hybrid_block(p, cfg, x, positions, mask,
+                                {"conv": conv, "ssm": ssm})
+        return x, None
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    x, _ = jax.lax.scan(blk, x, (params["layers"], ms["conv"], ms["ssm"]))
+    h = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = h @ params["lm_head"]
+    loss = L.softmax_xent(logits, labels, batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg, batch_size, max_len):
+    hd = cfg.resolved_head_dim()
+    kv_len = min(max_len, cfg.window) if cfg.window else max_len
+    ms = _zero_mstates(cfg, batch_size)
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, hd),
+                       _dtype(cfg)),
+        "v": jnp.zeros((cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, hd),
+                       _dtype(cfg)),
+        "conv": ms["conv"],
+        "ssm": ms["ssm"],
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg, batch, cache):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)
+    mask = L.causal_mask(S, S, window=cfg.window)
+    hd = cfg.resolved_head_dim()
+
+    def block(x, scanned):
+        p, conv, ssm = scanned
+        xn = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+        x, mstate, _ = _hybrid_block(p, cfg, x, positions, mask,
+                                     {"conv": conv, "ssm": ssm})
+        kk = L.rope(jnp.reshape(xn @ p["attn"]["wk"], (B, S, cfg.n_kv_heads, hd)),
+                    positions, cfg.rope_theta)
+        vv = jnp.reshape(xn @ p["attn"]["wv"], (B, S, cfg.n_kv_heads, hd))
+        return x, (mstate["conv"], mstate["ssm"],
+                   kk.astype(_dtype(cfg)), vv.astype(_dtype(cfg)))
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    x, (conv, ssm, ks, vs) = jax.lax.scan(
+        blk, x, (params["layers"], cache["conv"], cache["ssm"]))
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], ks, (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vs, (0, 0, 0, 0, 0))
+    cache["conv"], cache["ssm"] = conv, ssm
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    h = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return (h[:, -1:] @ params["lm_head"]).astype(jnp.float32), cache
+
+
+def decode_step(params, cfg, token, cache):
+    pos = cache["pos"]
+    x = params["embed"][token]
+    Tlen = cache["k"].shape[2]
+    kpos = jnp.arange(Tlen)
+    valid = kpos <= pos
+    if cfg.window:
+        valid &= (pos - kpos) < cfg.window
+
+    def block(x, scanned):
+        p, ck, cv, conv, ssm = scanned
+        x, mstate, new_kv = _hybrid_block(
+            p, cfg, x, None, None, {"conv": conv, "ssm": ssm},
+            decode_cache=(ck, cv), pos=pos, valid=valid)
+        return x, (new_kv[0], new_kv[1], mstate["conv"], mstate["ssm"])
+
+    x, (ks, vs, conv, ssm) = jax.lax.scan(
+        block, x, (params["layers"], cache["k"], cache["v"],
+                   cache["conv"], cache["ssm"]))
+    cache = dict(cache)
+    cache["k"], cache["v"] = ks, vs
+    cache["conv"], cache["ssm"] = conv, ssm
+    cache["pos"] = pos + 1
+    h = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return (h @ params["lm_head"]).astype(jnp.float32), cache

@@ -1,0 +1,308 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (train + cached
+decode, sliding-window and soft-cap variants), gated MLPs.
+
+Conventions:
+* params are nested dicts of jnp arrays; stacked along a leading layer axis
+  by the model modules (scan-over-layers).
+* activations compute in bfloat16 when params are bf16, with fp32 softmax
+  and loss; reduced smoke configs run fully in fp32.
+* attention masks: ``causal`` plus optional ``window`` (t within the last W
+  positions). gemma2-style ``local_global_alt`` alternates window/full by
+  layer parity (even layers local, per the Gemma 2 report).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm_init(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}     # gemma/llama style (1+scale)
+
+
+def rms_norm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.arange(half, dtype=jnp.float32)
+    inv = theta ** (-freq / half)                       # (half,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, half)
+    ang = ang[..., None, :]                             # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg, dtype, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    hd = cfg.resolved_head_dim()
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(kk, (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(kv, (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(ko, (cfg.n_heads * hd, d), dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _gqa_scores(q, k, n_kv: int):
+    """q: (B,S,H,hd), k: (B,T,KV,hd) -> scores (B,S,KV,G,T), fp32."""
+    B, S, H, hd = q.shape
+    g = H // n_kv
+    qg = q.reshape(B, S, n_kv, g, hd)
+    return jnp.einsum("bskgh,btkh->bskgt", qg.astype(jnp.float32),
+                      k.astype(jnp.float32)) * (hd ** -0.5)
+
+
+def _gqa_out(probs, v, H: int):
+    """probs: (B,S,KV,G,T), v: (B,T,KV,hd) -> (B,S,H*hd)."""
+    out = jnp.einsum("bskgt,btkh->bskgh", probs, v.astype(jnp.float32))
+    B, S = out.shape[:2]
+    return out.reshape(B, S, H * v.shape[-1])
+
+
+def causal_mask(S: int, T: int, *, offset: int = 0, window: int = 0):
+    """(S,T) bool mask; query position i attends key j iff j <= i+offset and
+    (no window or i+offset-j < window)."""
+    qpos = jnp.arange(S)[:, None] + offset
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= (qpos - kpos) < window
+    return m
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def attention(p, x, cfg, *, window: int = 0, positions=None,
+              kv_override=None, mask=None):
+    """Full (train/prefill) self- or cross-attention.
+
+    ``kv_override=(k_in, v_in)`` switches to cross-attention over encoder
+    states (whisper). ``mask`` overrides the causal mask (None + kv_override
+    = full visibility). With ``cfg.use_flash`` and a plain-causal setup
+    (no window/softcap), dispatches to the Pallas flash kernel.
+    """
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim()
+    q = _split_heads(x @ p["wq"], cfg.n_heads, hd)
+    if kv_override is None:
+        k = _split_heads(x @ p["wk"], cfg.n_kv_heads, hd)
+        v = _split_heads(x @ p["wv"], cfg.n_kv_heads, hd)
+        if positions is None:
+            positions = jnp.arange(S)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if (cfg.use_flash and not cfg.attn_softcap and not window
+                and not cfg.local_global_alt and S % 128 == 0):
+            from repro.kernels.flash_attention import flash_attention
+
+            out = flash_attention(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), causal=True,
+                interpret=jax.default_backend() != "tpu")
+            out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * hd)
+            return out @ p["wo"]
+        if mask is None:
+            mask = causal_mask(S, S, window=window)
+    else:
+        enc = kv_override
+        k = _split_heads(enc @ p["wk"], cfg.n_kv_heads, hd)
+        v = _split_heads(enc @ p["wv"], cfg.n_kv_heads, hd)
+    scores = _gqa_scores(q, k, cfg.n_kv_heads)
+    scores = softcap(scores, cfg.attn_softcap)
+    if mask is not None:
+        scores = jnp.where(mask[None, :, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, cfg.n_heads).astype(x.dtype)
+    return out @ p["wo"]
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg, *, window: int = 0):
+    """One-token decode against a KV cache.
+
+    x: (B,1,d); cache_k/v: (B,T,KV,hd); pos: scalar int32 — number of tokens
+    already in the cache. Returns (out (B,1,d), new_k, new_v).
+    """
+    B, _, d = x.shape
+    hd = cfg.resolved_head_dim()
+    T = cache_k.shape[1]
+    q = _split_heads(x @ p["wq"], cfg.n_heads, hd)
+    k_new = _split_heads(x @ p["wk"], cfg.n_kv_heads, hd)
+    v_new = _split_heads(x @ p["wv"], cfg.n_kv_heads, hd)
+    posv = jnp.full((B, 1), pos)
+    q = rope(q, posv, cfg.rope_theta)
+    k_new = rope(k_new, posv, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
+                                           (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
+                                           (0, pos, 0, 0))
+    kpos = jnp.arange(T)
+    valid = kpos <= pos
+    if window:
+        valid &= (pos - kpos) < window
+    scores = _gqa_scores(q, cache_k, cfg.n_kv_heads)       # (B,1,KV,G,T)
+    scores = softcap(scores, cfg.attn_softcap)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, cache_v, cfg.n_heads).astype(x.dtype)
+    return out @ p["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(key, d, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(k1, (d, d_ff), dtype),
+        "wu": dense_init(k2, (d, d_ff), dtype),
+        "wd": dense_init(k3, (d_ff, d), dtype),
+    }
+
+
+def swiglu(p, x):
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+def gelu_mlp_init(key, d, d_ff, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, (d, d_ff), dtype),
+        "wo": dense_init(k2, (d_ff, d), dtype),
+    }
+
+
+def gelu_mlp(p, x):
+    return jax.nn.gelu(x @ p["wi"], approximate=True) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def chunked_softmax_xent(h, head_w, labels, chunk, *, softcap_v=0.0,
+                         mask=None, head_transposed=False):
+    """Sequence-chunked LM loss: never materializes (B,S,V) logits.
+
+    §Perf lever for large-vocab archs: peak temp drops from 8·B·S·V bytes
+    (f32 logits + grads) to 8·B·chunk·V. ``head_w``: (d, V) — or (V, d)
+    with ``head_transposed=True`` for tied embeddings (computed via einsum
+    so the transpose is never materialized; measured on gemma2, where
+    passing ``embed.T`` costs a 2.4 GB buffer).
+    """
+    B, S, d = h.shape
+    n_chunks = S // chunk
+    assert n_chunks * chunk == S, "xent_chunk must divide seq_len"
+    hc = h.reshape(B, n_chunks, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    if mask is not None:
+        mc = mask.reshape(B, n_chunks, chunk).swapaxes(0, 1).astype(jnp.float32)
+    else:
+        mc = jnp.ones((n_chunks, B, chunk), jnp.float32)
+
+    def body(carry, xs):
+        h_i, l_i, m_i = xs
+        if head_transposed:
+            logits = jnp.einsum("bcd,vd->bcv", h_i, head_w).astype(jnp.float32)
+        else:
+            logits = (h_i @ head_w).astype(jnp.float32)
+        logits = softcap(logits, softcap_v)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_i[..., None], axis=-1)[..., 0]
+        nll, denom = carry
+        return (nll + jnp.sum((logz - gold) * m_i), denom + jnp.sum(m_i)), None
+
+    (nll, denom), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                   (hc, lc, mc))
+    return nll / jnp.maximum(denom, 1.0)
+
+
+def shard_activations(x, enabled: bool):
+    """§Perf lever: constrain the residual stream's feature dim over the
+    'model' axis (sequence-parallel-style), shrinking the remat carry and
+    turning TP all-reduces into reduce-scatter/all-gather pairs. No-op
+    when disabled or outside a mesh context."""
+    if not enabled:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        spec = [None] * (x.ndim - 1) + ["model"]
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):   # no mesh (CPU tests)
+        return x
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Token-level cross entropy; logits fp32-cast; mask optional (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,50 @@
+"""LLaVA-NeXT with Mistral-7B backbone (llava-next-mistral-7b).
+
+Per the brief, the vision tower + projector are a STUB: ``input_specs``
+provides precomputed patch embeddings at ``d_model`` (``image_tokens`` per
+tile × ``anyres_tiles`` tiles, the anyres grid). This module implements the
+language side: embeddings = [image patches ‖ text tokens], causal LM loss
+masked to text positions, sliding-window attention native to Mistral.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+init = T.init                       # identical backbone parameters
+init_cache = T.init_cache
+
+
+def n_image_tokens(cfg) -> int:
+    return cfg.image_tokens * cfg.anyres_tiles
+
+
+def _merge(params, cfg, batch):
+    """[image ‖ text] embeddings + text-only loss mask."""
+    img = batch["image_embeds"].astype(jnp.dtype(cfg.param_dtype))
+    tok = T.embed_tokens(params, cfg, batch["tokens"])
+    x = jnp.concatenate([img, tok], axis=1)
+    B, n_img = img.shape[:2]
+    return x, n_img
+
+
+def loss_fn(params, cfg, batch):
+    x, n_img = _merge(params, cfg, batch)
+    B, S_total = x.shape[:2]
+    h = T.stack_forward(params, cfg, x, jnp.arange(S_total))
+    logits = T.logits_fn(params, cfg, h[:, n_img:])         # text positions
+    # next-token prediction on the text segment only
+    loss = L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+def prefill(params, cfg, batch, cache):
+    """Prompt = image patches + text prefix."""
+    x, _ = _merge(params, cfg, batch)
+    return T.prefill_embeds(params, cfg, x, cache)
+
+
+decode_step = T.decode_step          # identical to the dense backbone

@@ -1,0 +1,211 @@
+"""RWKV-6 "Finch" (rwkv6-1.6b) — attention-free RNN LM.
+
+Implements the Finch signature features:
+* matrix-valued per-head state ``S ∈ R^{hd×hd}`` (head_dim 64),
+* **data-dependent decay** ``w_t = exp(-exp(w0 + tanh(x W_a) W_b))``
+  (the low-rank dynamic decay that distinguishes RWKV-6 from RWKV-5),
+* bonus ``u`` for the current token, token-shift mixing, and the
+  squared-ReLU channel-mix FFN.
+
+Recurrence (per head):
+    out_t = r_t · (S_{t-1} + (u ∘ k_t) ⊗ v_t)
+    S_t   = diag(w_t) · S_{t-1} + k_t ⊗ v_t
+
+Training/prefill run the recurrence with ``lax.scan`` over time (compact
+While HLO); decode is a single O(1) state update — no KV cache, which is
+why this arch runs ``long_500k`` natively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+DECAY_LORA = 64
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.resolved_head_dim()
+    ks = jax.random.split(key, 8)
+    tm = {
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5).astype(dt),  # r,k,v,w,g
+        "wr": L.dense_init(ks[1], (d, H * hd), dt),
+        "wk": L.dense_init(ks[2], (d, H * hd), dt),
+        "wv": L.dense_init(ks[3], (d, H * hd), dt),
+        "wg": L.dense_init(ks[4], (d, H * hd), dt),
+        "wo": L.dense_init(ks[5], (H * hd, d), dt),
+        "decay_a": L.dense_init(ks[6], (d, DECAY_LORA), dt),
+        "decay_b": L.dense_init(ks[7], (DECAY_LORA, H * hd), dt),
+        "w0": jnp.full((H * hd,), -0.6931, dt),      # base decay ~ 0.5
+        "u": jnp.zeros((H, hd), dt),
+        "ln_x": L.layer_norm_init(hd, dt),           # per-head group norm
+    }
+    kc = jax.random.split(ks[0], 3)
+    cm = {
+        "mu": (jax.random.uniform(kc[0], (2, d)) * 0.5).astype(dt),  # k,r
+        "wk": L.dense_init(kc[1], (d, cfg.d_ff), dt),
+        "wv": L.dense_init(kc[2], (cfg.d_ff, d), dt),
+        "wr": L.dense_init(jax.random.fold_in(kc[0], 1), (d, d), dt),
+    }
+    return {
+        "ln1": L.layer_norm_init(d, dt),
+        "tm": tm,
+        "ln2": L.layer_norm_init(d, dt),
+        "cm": cm,
+    }
+
+
+def init(key, cfg):
+    dt = _dtype(cfg)
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: block_init(k, cfg))(layer_keys)
+    return {
+        "embed": L.embed_init(ke, cfg.vocab, cfg.d_model, dt),
+        "layers": layers,
+        "final_norm": L.layer_norm_init(cfg.d_model, dt),
+        "lm_head": L.dense_init(kh, (cfg.d_model, cfg.vocab), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# time-mix (WKV6)
+# ---------------------------------------------------------------------------
+
+
+def _shift(x, last):
+    """Token shift: previous token's features; ``last`` (B,d) seeds t=0."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _tm_projections(p, cfg, x, last_x):
+    """r,k,v,g,w for a whole sequence. x: (B,T,d)."""
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim()
+    xx = _shift(x, last_x)
+    mix = lambda i: x + (xx - x) * p["mu"][i][None, None, :]
+    r = (mix(0) @ p["wr"]).reshape(B, T, H, hd)
+    k = (mix(1) @ p["wk"]).reshape(B, T, H, hd)
+    v = (mix(2) @ p["wv"]).reshape(B, T, H, hd)
+    # data-dependent decay (Finch): low-rank + base, squashed to (0,1)
+    dw = jnp.tanh(mix(3) @ p["decay_a"]) @ p["decay_b"]
+    w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32)
+                         + dw.astype(jnp.float32))).reshape(B, T, H, hd)
+    g = jax.nn.silu(mix(4) @ p["wg"]).reshape(B, T, H, hd)
+    return r, k, v, w, g
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Run the WKV6 recurrence over time.
+
+    r,k,v,w: (B,T,H,hd); u: (H,hd); state: (B,H,hd,hd) fp32.
+    Returns (out (B,T,H,hd) fp32, final state).
+    """
+    rT = jnp.moveaxis(r, 1, 0).astype(jnp.float32)
+    kT = jnp.moveaxis(k, 1, 0).astype(jnp.float32)
+    vT = jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+    wT = jnp.moveaxis(w, 1, 0).astype(jnp.float32)
+
+    def step(S, rkvw):
+        r_t, k_t, v_t, w_t = rkvw
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        out = jnp.einsum("bhi,bhij->bhj", r_t,
+                         S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, out
+
+    state, out = jax.lax.scan(step, state, (rT, kT, vT, wT))
+    return jnp.moveaxis(out, 0, 1), state
+
+
+def time_mix(p, cfg, x, tm_state):
+    """tm_state: {'S': (B,H,hd,hd) fp32, 'last': (B,d)}."""
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim()
+    r, k, v, w, g = _tm_projections(p, cfg, x, tm_state["last"])
+    out, S = wkv_scan(r, k, v, w, p["u"].astype(jnp.float32), tm_state["S"])
+    out = L.layer_norm(p["ln_x"], out.astype(x.dtype))       # per-head norm
+    out = (out * g).reshape(B, T, H * hd)
+    new_state = {"S": S, "last": x[:, -1, :]}
+    return out @ p["wo"], new_state
+
+
+def channel_mix(p, cfg, x, last_x):
+    xx = _shift(x, last_x)
+    xk = x + (xx - x) * p["mu"][0][None, None, :]
+    xr = x + (xx - x) * p["mu"][1][None, None, :]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# model interface
+# ---------------------------------------------------------------------------
+
+
+def _zero_states(cfg, B):
+    H, hd = cfg.n_heads, cfg.resolved_head_dim()
+    return {
+        "S": jnp.zeros((cfg.n_layers, B, H, hd, hd), jnp.float32),
+        "last_tm": jnp.zeros((cfg.n_layers, B, cfg.d_model), _dtype(cfg)),
+        "last_cm": jnp.zeros((cfg.n_layers, B, cfg.d_model), _dtype(cfg)),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _stack(params, cfg, x, states):
+    def block(x, scanned):
+        p, S, ltm, lcm = scanned
+        h, tm_state = time_mix(p["tm"], cfg, L.layer_norm(p["ln1"], x, cfg.norm_eps),
+                               {"S": S, "last": ltm})
+        x = x + h
+        h, lcm_new = channel_mix(p["cm"], cfg,
+                                 L.layer_norm(p["ln2"], x, cfg.norm_eps), lcm)
+        return x + h, (tm_state["S"], tm_state["last"], lcm_new)
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    x, (S, ltm, lcm) = jax.lax.scan(
+        blk, x, (params["layers"], states["S"], states["last_tm"],
+                 states["last_cm"]))
+    return L.layer_norm(params["final_norm"], x, cfg.norm_eps), {
+        "S": S, "last_tm": ltm, "last_cm": lcm,
+        "pos": states["pos"] + x.shape[1]}
+
+
+def loss_fn(params, cfg, batch):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = params["embed"][tokens]
+    h, _ = _stack(params, cfg, x, _zero_states(cfg, tokens.shape[0]))
+    logits = h @ params["lm_head"]
+    loss = L.softmax_xent(logits, labels, batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg, batch_size, max_len):
+    # O(1) recurrent state — max_len is irrelevant (the SSM advantage).
+    return _zero_states(cfg, batch_size)
+
+
+def prefill(params, cfg, batch, cache):
+    x = params["embed"][batch["tokens"]]
+    h, states = _stack(params, cfg, x, cache)
+    return (h[:, -1:] @ params["lm_head"]).astype(jnp.float32), states
+
+
+def decode_step(params, cfg, token, cache):
+    x = params["embed"][token]                    # (B,1,d)
+    h, states = _stack(params, cfg, x, cache)
+    return (h @ params["lm_head"]).astype(jnp.float32), states

@@ -1,0 +1,114 @@
+"""Concrete learning tasks (CNN / MF / LM) wiring the model zoo into the
+protocol core's :class:`~repro.core.tasks.LearningTask` interface.
+
+Each task jits one SGD step once and reuses it across all simulated nodes
+(they share architecture and hyperparameters per the paper's system model).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.config import ModelConfig, TrainConfig
+from repro.core.tasks import LearningTask
+from repro.data.loader import ClientDataset
+from repro.models import build
+
+
+class JaxTask(LearningTask):
+    """Generic task: model family chosen by cfg.family."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.model = build(cfg)
+        self.name = cfg.name
+        opt = optim.build(tcfg)
+        self._opt = opt
+
+        def step(params, opt_state, batch):
+            (loss, _metrics), grads = jax.value_and_grad(
+                self.model.loss_fn, has_aux=True)(params, batch)
+            upd, opt_state = opt.update(grads, opt_state, params)
+            return optim.apply_updates(params, upd), opt_state, loss
+
+        self._step = jax.jit(step)
+        self._eval = jax.jit(lambda p, b: self.model.loss_fn(p, b)[1])
+
+    # -- batch adaptation per family ------------------------------------------
+
+    def _to_batch(self, x, y) -> dict:
+        if self.cfg.family in ("cnn",):
+            return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+        if self.cfg.family in ("mf",):
+            return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+        return {"tokens": jnp.asarray(x), "labels": jnp.asarray(y)}
+
+    # -- LearningTask interface ---------------------------------------------
+
+    def init_params(self, seed: int = 0):
+        return self.model.init(jax.random.key(seed))
+
+    def local_train(self, params, client: ClientDataset, *, batch_size: int,
+                    epochs: int = 1, seed: int = 0, lr_scale: float = 1.0):
+        n_full = 0
+        opt_state = self._opt.init(params)      # fresh per round (paper: SGD)
+        for x, y in client.batches(batch_size, seed=seed, epochs=epochs):
+            if len(x) < batch_size:
+                if n_full:
+                    continue                    # drop ragged tail (no retrace)
+                reps = -(-batch_size // len(x))
+                x = np.concatenate([x] * reps)[:batch_size]
+                y = np.concatenate([y] * reps)[:batch_size]
+            params, opt_state, _ = self._step(params, opt_state,
+                                              self._to_batch(x, y))
+            n_full += 1
+        return params
+
+    def evaluate(self, params, test: ClientDataset) -> dict:
+        bs = 64
+        agg: dict = {}
+        n = 0
+        for lo in range(0, len(test), bs):
+            x, y = test.x[lo:lo + bs], test.y[lo:lo + bs]
+            if len(x) < bs:
+                pad = bs - len(x)
+                w = len(x)
+                x = np.concatenate([x, x[:1].repeat(pad, 0)])
+                y = np.concatenate([y, y[:1].repeat(pad, 0)])
+            else:
+                w = bs
+            m = self._eval(params, self._to_batch(x, y))
+            for k, v in m.items():
+                agg[k] = agg.get(k, 0.0) + float(v) * w
+            n += w
+        return {k: v / n for k, v in agg.items()}
+
+
+def cnn_task(tcfg: Optional[TrainConfig] = None, **cfg_overrides) -> JaxTask:
+    from repro.configs import get_config
+    cfg = get_config("paper-cnn").with_(**cfg_overrides)
+    return JaxTask(cfg, tcfg or TrainConfig(optimizer="momentum", lr=0.002,
+                                            momentum=0.9))
+
+
+def mf_task(tcfg: Optional[TrainConfig] = None, **cfg_overrides) -> JaxTask:
+    from repro.configs import get_config
+    cfg = get_config("paper-mf").with_(**cfg_overrides)
+    return JaxTask(cfg, tcfg or TrainConfig(optimizer="sgd", lr=0.2))
+
+
+def lm_task(arch: str = "tinyllama-1.1b", tcfg: Optional[TrainConfig] = None,
+            reduce: bool = True, **cfg_overrides) -> JaxTask:
+    from repro.configs import get_config, reduced
+    cfg = get_config(arch)
+    if reduce:
+        cfg = reduced(cfg)
+    cfg = cfg.with_(**cfg_overrides)
+    return JaxTask(cfg, tcfg or TrainConfig(optimizer="sgd", lr=0.05))

@@ -1,0 +1,257 @@
+"""Dense GQA decoder LM (llama3 / starcoder2 / tinyllama / gemma2).
+
+One block definition covers the dense variants:
+* RoPE GQA attention, SwiGLU MLP, RMSNorm (pre-norm; gemma2 adds post-norms)
+* optional sliding ``window``; gemma2's ``local_global_alt`` alternates
+  local/global by layer parity (even = local)
+* optional attention/final logit soft-capping (gemma2)
+* layers are stacked and scanned; ``remat`` checkpoints each block.
+
+Exports the uniform model interface (init / loss_fn / init_cache / prefill /
+decode_step) plus ``stack_*`` internals reused by the VLM wrapper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg):
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.rms_norm_init(cfg.d_model, dt),
+        "attn": L.attention_init(k1, cfg, dt),
+        "ln2": L.rms_norm_init(cfg.d_model, dt),
+        "mlp": L.swiglu_init(k2, cfg.d_model, cfg.d_ff, dt),
+    }
+    if cfg.local_global_alt:                     # gemma2 post-norms
+        p["post_ln1"] = L.rms_norm_init(cfg.d_model, dt)
+        p["post_ln2"] = L.rms_norm_init(cfg.d_model, dt)
+    return p
+
+
+def init(key, cfg):
+    dt = _dtype(cfg)
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: block_init(k, cfg))(layer_keys)
+    params = {
+        "embed": L.embed_init(ke, cfg.vocab, cfg.d_model, dt),
+        "layers": layers,
+        "final_norm": L.rms_norm_init(cfg.d_model, dt),
+    }
+    if not cfg.local_global_alt:                 # gemma2 ties the LM head
+        params["lm_head"] = L.dense_init(kh, (cfg.d_model, cfg.vocab), dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill share the stack; decode has its own scan)
+# ---------------------------------------------------------------------------
+
+
+def _masks(cfg, S, T, offset=0):
+    full = L.causal_mask(S, T, offset=offset)
+    if cfg.local_global_alt:
+        local = L.causal_mask(S, T, offset=offset, window=cfg.window)
+        return full, local
+    if cfg.window:
+        return L.causal_mask(S, T, offset=offset, window=cfg.window), None
+    return full, None
+
+
+def _block_apply(p, cfg, x, positions, mask):
+    h = L.attention(p["attn"], L.rms_norm(p["ln1"], x, cfg.norm_eps), cfg,
+                    positions=positions, mask=mask)
+    if "post_ln1" in p:
+        h = L.rms_norm(p["post_ln1"], h, cfg.norm_eps)
+    x = x + h
+    h = L.swiglu(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps))
+    if "post_ln2" in p:
+        h = L.rms_norm(p["post_ln2"], h, cfg.norm_eps)
+    return x + h
+
+
+def stack_forward(params, cfg, x, positions):
+    """Run the layer stack on embeddings x (B,S,d)."""
+    S = x.shape[1]
+    full_mask, local_mask = _masks(cfg, S, S)
+
+    def block(x, scanned):
+        p, idx = scanned
+        if cfg.local_global_alt:
+            mask = jnp.where((idx % 2) == 0, local_mask, full_mask)
+        else:
+            mask = full_mask
+        x = _block_apply(p, cfg, x, positions, mask)
+        return L.shard_activations(x, cfg.act_shard), None
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    x, _ = jax.lax.scan(blk, x, (params["layers"], jnp.arange(cfg.n_layers)))
+    return L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+
+
+def logits_fn(params, cfg, h):
+    if "lm_head" in params:
+        logits = h @ params["lm_head"]
+    else:
+        logits = h @ params["embed"].T
+    return L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+def embed_tokens(params, cfg, tokens):
+    x = params["embed"][tokens]
+    if cfg.local_global_alt:                     # gemma scales embeddings
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def loss_fn(params, cfg, batch):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = embed_tokens(params, cfg, tokens)
+    h = stack_forward(params, cfg, x, jnp.arange(tokens.shape[1]))
+    if cfg.xent_chunk:
+        tied = "lm_head" not in params
+        head = params["embed"] if tied else params["lm_head"]
+        loss = L.chunked_softmax_xent(h, head, labels, cfg.xent_chunk,
+                                      softcap_v=cfg.final_softcap,
+                                      mask=batch.get("mask"),
+                                      head_transposed=tied)
+    else:
+        logits = logits_fn(params, cfg, h)
+        loss = L.softmax_xent(logits, labels, batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size, max_len):
+    hd = cfg.resolved_head_dim()
+    shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, hd)
+    dt = _dtype(cfg)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg, batch, cache):
+    """Run the prompt through the stack, filling the cache."""
+    x = embed_tokens(params, cfg, batch["tokens"])
+    return prefill_embeds(params, cfg, x, cache)
+
+
+def prefill_embeds(params, cfg, x, cache):
+    """Prefill from raw embeddings (B,S,d) — used directly by the VLM
+    wrapper, which prepends stubbed image-patch embeddings."""
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)
+    full_mask, local_mask = _masks(cfg, S, S)
+    hd = cfg.resolved_head_dim()
+
+    def block(x, scanned):
+        p, idx = scanned
+        if cfg.local_global_alt:
+            mask = jnp.where((idx % 2) == 0, local_mask, full_mask)
+        else:
+            mask = full_mask
+        xn = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+        h = L.attention(p["attn"], xn, cfg, positions=positions, mask=mask)
+        if "post_ln1" in p:
+            h = L.rms_norm(p["post_ln1"], h, cfg.norm_eps)
+        x = x + h
+        h = L.swiglu(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps))
+        if "post_ln2" in p:
+            h = L.rms_norm(p["post_ln2"], h, cfg.norm_eps)
+        x = x + h
+        # recompute k/v for the cache (cheap relative to attention itself)
+        kk = L.rope(jnp.reshape(xn @ p["attn"]["wk"], (B, S, cfg.n_kv_heads, hd)),
+                    positions, cfg.rope_theta)
+        vv = jnp.reshape(xn @ p["attn"]["wv"], (B, S, cfg.n_kv_heads, hd))
+        return x, (kk.astype(_dtype(cfg)), vv.astype(_dtype(cfg)))
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    x, (ks, vs) = jax.lax.scan(blk, x, (params["layers"], jnp.arange(cfg.n_layers)))
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], ks, (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vs, (0, 0, 0, 0, 0))
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    h = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, h[:, -1:]), cache
+
+
+def decode_step(params, cfg, token, cache):
+    """One new token (B,1) against the cache; returns (logits, cache)."""
+    pos = cache["pos"]
+    x = embed_tokens(params, cfg, token)
+    T = cache["k"].shape[2]
+    kpos = jnp.arange(T)
+    valid_full = kpos <= pos
+    valid_local = valid_full & ((pos - kpos) < cfg.window) if cfg.window else valid_full
+
+    def block(x, scanned):
+        p, idx, ck, cv = scanned
+        if cfg.local_global_alt:
+            valid = jnp.where((idx % 2) == 0, valid_local, valid_full)
+        else:
+            valid = valid_local if cfg.window else valid_full
+        xn = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+        out, ck, cv = _attention_decode_masked(p["attn"], xn, ck, cv, pos, cfg, valid)
+        if "post_ln1" in p:
+            out = L.rms_norm(p["post_ln1"], out, cfg.norm_eps)
+        x = x + out
+        h = L.swiglu(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps))
+        if "post_ln2" in p:
+            h = L.rms_norm(p["post_ln2"], h, cfg.norm_eps)
+        return x + h, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        block, x,
+        (params["layers"], jnp.arange(cfg.n_layers), cache["k"], cache["v"]))
+    cache = dict(cache)
+    cache["k"], cache["v"] = ks, vs
+    cache["pos"] = pos + 1
+    h = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, h), cache
+
+
+def _attention_decode_masked(p, x, cache_k, cache_v, pos, cfg, valid):
+    """attention_decode with an externally supplied validity vector (the
+    local/global select must happen outside because `window` is traced
+    under the layer scan)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim()
+    q = x @ p["wq"]
+    q = q.reshape(B, 1, cfg.n_heads, hd)
+    k_new = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    v_new = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    posv = jnp.full((B, 1), pos)
+    q = L.rope(q, posv, cfg.rope_theta)
+    k_new = L.rope(k_new, posv, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, pos, 0, 0))
+    scores = L._gqa_scores(q, cache_k, cfg.n_kv_heads)
+    scores = L.softcap(scores, cfg.attn_softcap)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = L._gqa_out(probs, cache_v, cfg.n_heads).astype(x.dtype)
+    return out @ p["wo"], cache_k, cache_v

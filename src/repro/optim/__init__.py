@@ -1,0 +1,167 @@
+"""Optimizers (optax is not available offline; this is a small, pure-JAX
+equivalent with the exact update rules the paper and its FL variants need).
+
+An optimizer is a pair of pure functions bundled in :class:`Optimizer`:
+
+    init(params)                 -> state
+    update(grads, state, params) -> (updates, state)
+
+``apply_updates`` adds the updates. ``yogi`` implements the server-side
+optimizer of FedYogi (Reddi et al., 2021), which the paper singles out as
+directly implementable on MoDeST aggregators (§5).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.utils.pytree import tree_global_norm, tree_zeros_like
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: float, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        def u(g, p):
+            g = g + weight_decay * p if (weight_decay and p is not None) else g
+            return -lr * g
+
+        if weight_decay and params is not None:
+            return jax.tree.map(u, grads, params), state
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False,
+             weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return tree_zeros_like(params)
+
+    def update(grads, state, params=None):
+        if weight_decay and params is not None:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        new_m = jax.tree.map(lambda m, g: beta * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -lr * (beta * m + g), new_m, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+class _AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return _AdamState(tree_zeros_like(params), tree_zeros_like(params),
+                          jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state.nu, grads)
+        c = count.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1 ** c)
+        nu_hat_scale = 1.0 / (1 - b2 ** c)
+
+        def u(m, v, p):
+            step = -lr * (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+            if weight_decay and p is not None:
+                step = step - lr * weight_decay * p
+            return step
+
+        if params is None:
+            params = jax.tree.map(lambda m: None, mu)
+        upd = jax.tree.map(u, mu, nu, params)
+        return upd, _AdamState(mu, nu, count)
+
+    return Optimizer(init, update)
+
+
+def yogi(lr: float, b1: float = 0.9, b2: float = 0.99, eps: float = 1e-3) -> Optimizer:
+    """Yogi (used server-side for FedYogi): v += (1-b2) * g^2 * sign(g^2 - v)."""
+
+    def init(params):
+        return _AdamState(tree_zeros_like(params), tree_zeros_like(params),
+                          jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: v - (1 - b2) * jnp.square(g) * jnp.sign(v - jnp.square(g)),
+            state.nu, grads)
+        upd = jax.tree.map(lambda m, v: -lr * m / (jnp.sqrt(v) + eps), mu, nu)
+        return upd, _AdamState(mu, nu, count)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+
+
+def clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
+    def update(grads, state, params=None):
+        norm = tree_global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        return opt.update(grads, state, params)
+
+    return Optimizer(opt.init, update)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 0):
+    def lr_at(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1 + jnp.cos(math.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr_at
+
+
+def build(cfg: TrainConfig, server: bool = False) -> Optimizer:
+    """Build the client- or server-side optimizer from a TrainConfig."""
+    name = cfg.server_optimizer if server else cfg.optimizer
+    lr = cfg.server_lr if server else cfg.lr
+    if name in ("sgd", "avg"):
+        opt = sgd(lr, cfg.weight_decay if not server else 0.0)
+    elif name == "momentum":
+        opt = momentum(lr, cfg.momentum or 0.9, weight_decay=cfg.weight_decay)
+    elif name == "adamw":
+        opt = adamw(lr, weight_decay=cfg.weight_decay)
+    elif name == "yogi":
+        opt = yogi(lr)
+    else:
+        raise ValueError(f"unknown optimizer {name!r}")
+    if cfg.grad_clip and not server:
+        opt = clip_by_global_norm(opt, cfg.grad_clip)
+    return opt

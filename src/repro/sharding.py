@@ -1,0 +1,289 @@
+"""Sharding policy: maps every parameter/input to a PartitionSpec on the
+production mesh.
+
+Axes (see DESIGN.md §3):
+
+* ``data``  — participant replicas (MoDeST sample slots) for ≤~30 B archs,
+  or FSDP shards for the pod-granularity giants (llama3-405b, arctic-480b);
+* ``model`` — tensor/expert parallelism inside one participant;
+* ``pod``   — (multi-pod) participants at pod granularity, or extra
+  participant slots at data_rank granularity.
+
+Train-path params carry a leading participant axis P; serve-path params do
+not (one model, maximally sharded).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MeshConfig, ModelConfig, ShapeConfig
+
+
+class ShardingPolicy:
+    def __init__(self, cfg: ModelConfig, mesh_cfg: MeshConfig):
+        self.cfg = cfg
+        self.mesh_cfg = mesh_cfg
+        self._axis_size = {"data": mesh_cfg.data, "model": mesh_cfg.model,
+                           "pod": mesh_cfg.pods if mesh_cfg.multi_pod else 1}
+        gran = cfg.participant_granularity
+        if gran == "pod":
+            self.part_axis: Optional[object] = "pod" if mesh_cfg.multi_pod else None
+            self.n_participants = mesh_cfg.pods if mesh_cfg.multi_pod else 1
+            self.fsdp_axis: Optional[str] = "data"
+            self.batch_axis: Optional[str] = "data"
+        elif gran == "chip":
+            # §Perf (beyond-paper): one participant per chip — the model is
+            # fully replicated, TP activation all-reduces disappear, and
+            # MoDeST's aggregation all-reduce becomes the ONLY collective.
+            # Right for models whose replica + grads fit one chip (≤ ~3 B).
+            self.part_axis = (("pod", "data", "model") if mesh_cfg.multi_pod
+                              else ("data", "model"))
+            self.n_participants = mesh_cfg.n_devices
+            self.fsdp_axis = None
+            self.batch_axis = None
+            self._replicated = True
+        else:                                     # "data_rank"
+            self.part_axis = (("pod", "data") if mesh_cfg.multi_pod else "data")
+            self.n_participants = (mesh_cfg.pods * mesh_cfg.data
+                                   if mesh_cfg.multi_pod else mesh_cfg.data)
+            self.fsdp_axis = None
+            self.batch_axis = None
+
+    _replicated = False
+
+    # ------------------------------------------------------------------ rules
+
+    def _base_rules(self):
+        """(regex on '/'-joined path, spec WITHOUT layer/participant axes).
+
+        ``F`` marks the FSDP axis (None unless pod granularity); ``M`` the
+        tensor/expert-parallel axis.
+        """
+        F, M = self.fsdp_axis, "model"
+        return [
+            # embeddings / heads
+            (r"embed$", (M, F)),
+            (r"enc_pos$", (None, F)),
+            (r"lm_head$", (F, M)),
+            # MoE: experts over the model axis (expert parallelism);
+            # arctic's dense residual shards like a normal MLP.
+            (r"moe/router$", (F, None)),
+            (r"moe/dense/w[gu]$", (F, M)),
+            (r"moe/dense/wd$", (M, F)),
+            (r"moe/w[gud]$", (M, F, None)),
+            # attention (MoE §Perf lever: replicate instead of TP — the
+            # experts dominate params; attention TP all-reduces vanish)
+            (r"attn/w[qkvo]$", None) if self.cfg.replicate_attention else
+            (r"attn/w[qkv]$", (F, M)),
+            (r"attn/wo$", (M, F)),
+            (r"xattn/w[qkv]$", (F, M)),
+            (r"xattn/wo$", (M, F)),
+            # dense MLPs (swiglu / gelu): first matmuls shard d_ff
+            (r"mlp/w[gui]$", (F, M)),
+            (r"mlp/w[do]$", (M, F)),
+            # rwkv time-mix / channel-mix
+            (r"tm/w[rkvg]$", (F, M)),
+            (r"tm/wo$", (M, F)),
+            (r"tm/decay_a$", (F, None)),
+            (r"tm/decay_b$", (None, M)),
+            (r"tm/w0$", (M,)),
+            (r"tm/u$", (M, None)),
+            (r"tm/mu$", (None, F)),
+            (r"cm/wk$", (F, M)),
+            (r"cm/wv$", (M, F)),
+            (r"cm/wr$", (F, M)),
+            (r"cm/mu$", (None, F)),
+            # hymba mamba branch (d_inner sharded over model)
+            (r"mamba/in_proj$", (F, M)),
+            (r"mamba/out_proj$", (M, F)),
+            (r"mamba/conv$", (None, M)),
+            (r"mamba/conv_b$", (M,)),
+            (r"mamba/dt_proj$", (M, None)),
+            (r"mamba/dt_up$", (None, M)),
+            (r"mamba/dt_bias$", (M,)),
+            (r"mamba/bc_proj$", (M, None)),
+            (r"mamba/a_log$", (M, None)),
+            (r"mamba/d_skip$", (M,)),
+            # cnn / mf (protocol-form models: replicate)
+            (r"(users|items|b_user|b_item)$", None),
+        ]
+
+    def _match(self, path: str) -> Tuple:
+        if self._replicated:
+            return (None,) * 8
+        for pat, spec in self._base_rules():
+            if re.search(pat, path):
+                if spec is None:
+                    break
+                return spec
+        # norms / scalars / biases: replicated (trimmed to rank by caller)
+        return (None,) * 8
+
+    def _axes_size(self, axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= self._axis_size.get(a, 1)
+            return n
+        return self._axis_size.get(axis, 1)
+
+    def _fix_divisibility(self, spec, shape):
+        """Drop axis assignments whose size does not divide the dim (odd
+        vocabs like 51866/32001, kv_heads < model ranks): replicate that
+        dim instead of failing to lower."""
+        out = []
+        for dim, axis in zip(shape, spec):
+            out.append(axis if (axis is None or dim % self._axes_size(axis) == 0)
+                       else None)
+        return tuple(out)
+
+    # ------------------------------------------------------------ public API
+
+    def param_spec(self, params, *, with_participants: bool) -> object:
+        """Pytree of PartitionSpec matching ``params`` (a template pytree).
+
+        ``with_participants`` expects a leading P axis on every leaf and a
+        layer-stack axis on leaves under ``layers``/``encoder``/``decoder``.
+        """
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        specs = []
+        for path_elems, leaf in flat:
+            path = "/".join(_k(p) for p in path_elems)
+            base = list(self._match(path))
+            stacked = bool(re.search(r"(layers|encoder|decoder)/", path + "/"))
+            ndim = np.ndim(leaf) if not hasattr(leaf, "shape") else len(leaf.shape)
+            lead = (1 if with_participants else 0) + (1 if stacked else 0)
+            base = base[: max(ndim - lead, 0)]
+            while len(base) < ndim - lead:
+                base.append(None)
+            spec = tuple(base)
+            if stacked:
+                spec = (None,) + spec
+            if with_participants:
+                spec = (self.part_axis,) + spec
+            shape = tuple(leaf.shape)
+            specs.append(P(*self._fix_divisibility(spec, shape)))
+        treedef = jax.tree_util.tree_structure(params)
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    def batch_spec(self, batch, *, with_participants: bool,
+                   shard_seq: bool = False) -> object:
+        """Inputs: train (P, E, B, ...) — E is the local-step/microbatch
+        axis; serve (B, ...)."""
+        def leaf_spec(leaf):
+            nd = len(leaf.shape)
+            if with_participants:
+                spec = ([self.part_axis, None, self.batch_axis]
+                        + [None] * (nd - 3))
+            else:
+                spec = [None if shard_seq else "data"] + [None] * (nd - 1)
+            return P(*self._fix_divisibility(tuple(spec), tuple(leaf.shape)))
+
+        return jax.tree.map(leaf_spec, batch)
+
+    def cache_spec(self, cache, *, shard_seq: bool) -> object:
+        """KV caches (L,B,T,KV,hd) + recurrent states.
+
+        ``shard_seq`` (long_500k, B=1): shard T over ``data`` —
+        flash-decoding-style partial softmax under GSPMD; otherwise shard B.
+        """
+        def leaf_spec(path_elems, leaf):
+            name = _k(path_elems[-1]) if path_elems else ""
+            nd = len(leaf.shape)
+            shape = tuple(leaf.shape)
+            if nd == 0:
+                return P()
+            if name in ("k", "v", "xk", "xv"):           # (L,B,T,KV,hd)
+                kv_ok = shape[3] % self._axis_size["model"] == 0
+                if shard_seq:
+                    spec = (None, None, "data", "model" if kv_ok else None, None)
+                elif kv_ok:
+                    spec = (None, "data", None, "model", None)
+                else:
+                    # kv heads don't divide the model axis: shard the
+                    # sequence dim over 'model' instead (flash-decoding-
+                    # style partial softmax under GSPMD).
+                    spec = (None, "data", "model", None, None)
+            elif name == "S":                             # rwkv (L,B,H,hd,hd)
+                spec = (None, None if shard_seq else "data", "model", None, None)
+            elif name == "ssm":                           # hymba (L,B,di,N)
+                spec = (None, None if shard_seq else "data", "model", None)
+            elif name in ("conv", "last_tm", "last_cm"):  # (L,B,*,d)/(L,B,d)
+                spec = ((None, None if shard_seq else "data", None, "model")
+                        if nd == 4 else
+                        (None, None if shard_seq else "data", "model"))
+            else:
+                spec = tuple([None] * nd)
+            return P(*self._fix_divisibility(spec, shape))
+
+        flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+        specs = [leaf_spec(pe, leaf) for pe, leaf in flat]
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(cache), specs)
+
+    def weights_spec(self) -> P:
+        return P(self.part_axis)
+
+
+def _k(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs for the dry-run
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, policy: ShardingPolicy):
+    """ShapeDtypeStruct stand-ins for every model input of this (arch, shape).
+
+    train: per-participant token batches (P, E=1, B/P, S)
+    prefill: (B, S) prompt (+ modality stubs)
+    decode: (B, 1) next token + a cache holding ``seq_len`` tokens
+    """
+    f32 = jnp.float32
+    i32 = jnp.int32
+    bf = jnp.dtype(cfg.param_dtype)
+    sd = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        Pn = policy.n_participants
+        B = max(shape.global_batch // max(Pn, 1), 1)
+        batch = {
+            "tokens": sd((Pn, 1, B, shape.seq_len), i32),
+            "labels": sd((Pn, 1, B, shape.seq_len), i32),
+        }
+        if cfg.family == "audio":
+            batch["frames"] = sd((Pn, 1, B, cfg.n_frames, cfg.d_model), bf)
+        if cfg.family == "vlm":
+            n_img = cfg.image_tokens * cfg.anyres_tiles
+            batch["image_embeds"] = sd((Pn, 1, B, n_img, cfg.d_model), bf)
+        return batch
+
+    B = shape.global_batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sd((B, shape.seq_len), i32)}
+        if cfg.family == "audio":
+            batch["frames"] = sd((B, cfg.n_frames, cfg.d_model), bf)
+        if cfg.family == "vlm":
+            n_img = cfg.image_tokens * cfg.anyres_tiles
+            batch["image_embeds"] = sd((B, n_img, cfg.d_model), bf)
+        return batch
+
+    # decode: one token against a seq_len cache
+    return {"token": sd((B, 1), i32)}

@@ -1,0 +1,14 @@
+"""Discrete-event WAN simulator.
+
+Replaces the paper's asyncio + IPv8/UDP deployment (the paper itself
+simulates time for its DL comparisons, §4.2). Provides:
+
+* :class:`repro.sim.clock.Simulator` — event queue with virtual time
+* :class:`repro.sim.network.Network` — latency-matrix message delivery with
+  per-node / per-message-type byte accounting (Table 4)
+* :mod:`repro.sim.churn` — join/leave/crash schedules (Figs. 5–6)
+* :mod:`repro.sim.runner` — session drivers for MoDeST / FedAvg / D-SGD
+"""
+
+from repro.sim.clock import Simulator  # noqa: F401
+from repro.sim.network import Network, wan_latency_matrix  # noqa: F401

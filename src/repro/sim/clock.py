@@ -1,0 +1,61 @@
+"""Event-queue simulation kernel with virtual time and cancellable events."""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    fn: Callable = field(compare=False)
+    cancelled: bool = field(default=False, compare=False)
+
+
+class Handle:
+    """Returned by ``schedule``; ``cancel()`` makes the event a no-op."""
+
+    __slots__ = ("_ev",)
+
+    def __init__(self, ev: _Event):
+        self._ev = ev
+
+    def cancel(self) -> None:
+        self._ev.cancelled = True
+
+    @property
+    def cancelled(self) -> bool:
+        return self._ev.cancelled
+
+
+class Simulator:
+    def __init__(self):
+        self.now: float = 0.0
+        self._q: list = []
+        self._seq = itertools.count()
+        self.events_processed = 0
+
+    def schedule(self, delay: float, fn: Callable) -> Handle:
+        ev = _Event(self.now + max(delay, 0.0), next(self._seq), fn)
+        heapq.heappush(self._q, ev)
+        return Handle(ev)
+
+    def run(self, until: Optional[float] = None, max_events: int = 50_000_000) -> None:
+        while self._q and self.events_processed < max_events:
+            if until is not None and self._q[0].time > until:
+                self.now = until
+                return
+            ev = heapq.heappop(self._q)
+            self.now = ev.time
+            if ev.cancelled:
+                continue
+            self.events_processed += 1
+            ev.fn()
+
+    @property
+    def pending(self) -> int:
+        return sum(1 for ev in self._q if not ev.cancelled)

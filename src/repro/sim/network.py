@@ -1,0 +1,107 @@
+"""WAN network model: latency matrix + bandwidth + byte accounting.
+
+The paper replays WonderNetwork ping times between 227 cities; offline we
+synthesize an equivalent geo-latency matrix (points on a sphere, great-
+circle propagation delay + jitter) with the same 5–300 ms RTT range, and
+assign nodes to cities round-robin exactly as in §4.2.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+
+def wan_latency_matrix(n_cities: int = 227, seed: int = 7) -> np.ndarray:
+    """One-way latency (seconds) between synthetic cities."""
+    rng = np.random.default_rng(seed)
+    # Random points on the unit sphere.
+    v = rng.normal(size=(n_cities, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    # Great-circle angle -> propagation delay. Earth half-circumference
+    # ~20000 km at ~200 km/ms effective fiber speed ≈ 100 ms max one-way,
+    # plus per-hop jitter and a 2 ms floor.
+    ang = np.arccos(np.clip(v @ v.T, -1, 1))           # [0, pi]
+    base = ang / np.pi * 0.100
+    jitter = rng.uniform(0.002, 0.02, size=(n_cities, n_cities))
+    lat = base + (jitter + jitter.T) / 2
+    np.fill_diagonal(lat, 0.0005)
+    return lat.astype(np.float64)
+
+
+class Network:
+    """Message fabric with latency + bandwidth delays and byte accounting."""
+
+    def __init__(self, sim, n_nodes: int, *, latency: Optional[np.ndarray] = None,
+                 bandwidth: float = 20e6, seed: int = 0):
+        self.sim = sim
+        self.bandwidth = bandwidth   # bytes/s per flow (paper: WAN uplink)
+        lat = latency if latency is not None else wan_latency_matrix(seed=seed)
+        cities = np.arange(n_nodes) % len(lat)          # round-robin (§4.2)
+        self._lat = lat
+        self._city = cities
+        self.nodes: Dict[str, object] = {}
+        # accounting
+        self.bytes_out = defaultdict(int)
+        self.bytes_in = defaultdict(int)
+        self.bytes_by_type = defaultdict(int)
+        self.msgs_by_type = defaultdict(int)
+
+    def register(self, node) -> None:
+        self.nodes[node.node_id] = node
+
+    def latency(self, src: str, dst: str) -> float:
+        i = self._city[int(src) % len(self._city)]
+        j = self._city[int(dst) % len(self._city)]
+        return float(self._lat[i, j])
+
+    def send(self, src: str, dst: str, msg) -> None:
+        size = msg.size_bytes()
+        self.bytes_out[src] += size
+        self.bytes_by_type[type(msg).__name__] += size
+        self.msgs_by_type[type(msg).__name__] += 1
+        node = self.nodes.get(dst)
+        if node is None:
+            return
+        delay = self.latency(src, dst) + size / self.bandwidth
+
+        def deliver():
+            n = self.nodes.get(dst)
+            if n is None or not n.online:
+                return                       # crashed/unresponsive: dropped
+            self.bytes_in[dst] += size
+            n.receive(msg)
+
+        self.sim.schedule(delay, deliver)
+
+    # ---- Table-4 style summaries -----------------------------------------
+
+    def usage_summary(self) -> dict:
+        # Paper Table 4 counts incoming+outgoing per node; "Total" sums that
+        # over nodes (hence the FedAvg server's Max ≈ 50% of Total).
+        per_node = {nid: self.bytes_out[nid] + self.bytes_in[nid]
+                    for nid in self.nodes}
+        vals = list(per_node.values()) or [0]
+        return {
+            "total_bytes": int(sum(self.bytes_out.values())
+                               + sum(self.bytes_in.values())),
+            "sent_bytes": int(sum(self.bytes_out.values())),
+            "min_node_bytes": int(min(vals)),
+            "max_node_bytes": int(max(vals)),
+            "by_type": dict(self.bytes_by_type),
+            "msgs_by_type": dict(self.msgs_by_type),
+        }
+
+    def overhead_fraction(self) -> float:
+        """MoDeST overhead = all bytes beyond raw model payloads (Table 4
+        bottom): views, pings/pongs, join/left and framing."""
+        total = sum(self.bytes_by_type.values())
+        return (total - self._payload_bytes) / total if total else 0.0
+
+    _payload_bytes: int = 0
+
+    def account_payload(self, nbytes: int) -> None:
+        """Called by the transport for every raw model payload sent."""
+        self._payload_bytes += nbytes

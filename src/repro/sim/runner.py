@@ -1,0 +1,407 @@
+"""Session drivers: MoDeST, FedAvg (emulated per §4.3) and D-SGD baselines.
+
+Each session wires a population of nodes to the simulator + network, runs
+the protocol for a simulated duration, and collects:
+
+* ``history`` — (sim_time, round, metrics) model-quality curve
+* ``round_times`` — completion time per round
+* ``sample_durations`` — SAMPLE() latency (Fig. 6 bottom)
+* ``network.usage_summary()`` — Table 4 byte accounting
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.config import ModestConfig, TrainConfig
+from repro.core import messages as M
+from repro.core.hashing import sample_order
+from repro.core.node import ModestNode
+from repro.core.tasks import AbstractTask, LearningTask
+from repro.data.loader import FederatedData
+from repro.sim.clock import Simulator
+from repro.sim.network import Network
+
+
+def _speeds(n: int, seed: int, base: float = 0.05, spread: float = 3.0):
+    """Heterogeneous per-node seconds-per-batch (stragglers exist)."""
+    rng = np.random.default_rng(seed + 1234)
+    return base * rng.uniform(1.0, spread, size=n)
+
+
+@dataclass
+class SessionResult:
+    history: List[dict] = field(default_factory=list)
+    round_times: List[tuple] = field(default_factory=list)
+    sample_durations: List[tuple] = field(default_factory=list)
+    usage: dict = field(default_factory=dict)
+    overhead_fraction: float = 0.0
+    rounds_completed: int = 0
+    final_metrics: dict = field(default_factory=dict)
+
+    def metric_curve(self, key: str):
+        return [(h["t"], h[key]) for h in self.history if key in h]
+
+
+class ModestSession:
+    """Full MoDeST session (the paper's system)."""
+
+    def __init__(self, *, n_nodes: int, mcfg: ModestConfig, tcfg: TrainConfig,
+                 task: LearningTask, data: Optional[FederatedData] = None,
+                 bandwidth: float = 20e6, seed: int = 0,
+                 eval_every_rounds: int = 10,
+                 fixed_aggregator: bool = False):
+        self.sim = Simulator()
+        self.net = Network(self.sim, n_nodes, bandwidth=bandwidth, seed=seed)
+        self.mcfg, self.tcfg, self.task = mcfg, tcfg, task
+        self.eval_every = eval_every_rounds
+        self.data = data
+        self.result = SessionResult()
+        self._latest_round_seen = 0
+        self._eval_models: Dict[int, object] = {}
+
+        ids = [str(i) for i in range(n_nodes)]
+        speeds = _speeds(n_nodes, seed)
+        fixed_id = None
+        if fixed_aggregator:
+            fixed_id = self._best_connected(ids)
+        self.nodes: Dict[str, ModestNode] = {}
+        for i, nid in enumerate(ids):
+            node = ModestNode(
+                nid, self.sim, self.net, mcfg, tcfg, task,
+                data=data.clients[i % len(data.clients)] if data else None,
+                train_speed=float(speeds[i]),
+                on_aggregate=self._on_aggregate,
+                fixed_aggregator=fixed_id)
+            node.bootstrap(ids)
+            self.nodes[nid] = node
+
+        # Round-1 bootstrap: nodes that find themselves in S^1 self-activate.
+        init = task.init_params(tcfg.seed) if data is not None else None
+        s1 = sample_order(ids, 1)[:mcfg.sample_size]
+        if fixed_id is not None:
+            # FL emulation: the fixed server aggregates; participants of S^1
+            # are chosen by it. Server bootstraps the round by "aggregating"
+            # the initial model once.
+            server = self.nodes[fixed_id]
+            payload = (M.ModelPayload(params=init) if init is not None
+                       else M.ModelPayload(nbytes=task.model_bytes()))
+            server.k_agg = 1
+            server._theta_list = [payload]
+            server._do_aggregate(1)
+        else:
+            for nid in s1:
+                self.nodes[nid].self_activate(1, init)
+
+    # ------------------------------------------------------------------ hooks
+
+    def _best_connected(self, ids) -> str:
+        """§4.3: the FL server = node with lowest median latency to others."""
+        med = {nid: np.median([self.net.latency(nid, o) for o in ids if o != nid])
+               for nid in ids}
+        return min(med, key=med.get)
+
+    def _on_aggregate(self, k: int, params, node: ModestNode) -> None:
+        now = self.sim.now
+        if k > self._latest_round_seen:
+            self._latest_round_seen = k
+            self.result.round_times.append((now, k))
+            if params is not None and (k % self.eval_every == 0 or k == 1):
+                self._eval_models[k] = params
+            elif params is None and (k % self.eval_every == 0 or k == 1):
+                self.result.history.append({"t": now, "round": k})
+
+    # ------------------------------------------------------------------- churn
+
+    def schedule_join(self, at: float, node_id: str, *, data_idx: int = 0) -> None:
+        def do_join():
+            node = ModestNode(
+                node_id, self.sim, self.net, self.mcfg, self.tcfg, self.task,
+                data=self.data.clients[data_idx % len(self.data.clients)]
+                if self.data else None,
+                train_speed=0.05, on_aggregate=self._on_aggregate)
+            # A joiner knows only its bootstrap peers (Alg. 2 Require).
+            peers = list(np.random.default_rng(len(node_id)).choice(
+                [n for n in self.nodes], size=min(self.mcfg.sample_size,
+                                                  len(self.nodes)),
+                replace=False))
+            self.nodes[node_id] = node
+            node.request_join(peers)
+
+        self.sim.schedule(at - self.sim.now, do_join)
+
+    def schedule_crash(self, at: float, node_id: str) -> None:
+        self.sim.schedule(at - self.sim.now,
+                          lambda: self.nodes[node_id].crash())
+
+    def schedule_leave(self, at: float, node_id: str) -> None:
+        def do_leave():
+            node = self.nodes[node_id]
+            peers = [n for n in self.nodes if n != node_id][: self.mcfg.sample_size]
+            node.request_leave(peers)
+
+        self.sim.schedule(at - self.sim.now, do_leave)
+
+    # --------------------------------------------------------------------- run
+
+    def run(self, duration: float) -> SessionResult:
+        self.sim.run(until=duration)
+        # Evaluate collected models (lazily, once, at the end — evaluation
+        # does not consume simulated time, matching §4.2).
+        if self.data is not None and self.data.test is not None:
+            for (t, k) in self.result.round_times:
+                if k in self._eval_models:
+                    m = self.task.evaluate(self._eval_models[k], self.data.test)
+                    self.result.history.append({"t": t, "round": k, **m})
+        self.result.history.sort(key=lambda h: h["t"])
+        self.result.usage = self.net.usage_summary()
+        self.result.overhead_fraction = self.net.overhead_fraction()
+        self.result.rounds_completed = self._latest_round_seen
+        for node in self.nodes.values():
+            self.result.sample_durations.extend(node.sample_durations)
+        self.result.sample_durations.sort()
+        if self.result.history:
+            self.result.final_metrics = {
+                k: v for k, v in self.result.history[-1].items()
+                if k not in ("t", "round")}
+        return self.result
+
+
+# ---------------------------------------------------------------------------
+# D-SGD baseline (§4.3): one-peer exponential graph, synchronous rounds.
+# ---------------------------------------------------------------------------
+
+
+class _DSGDNode:
+    def __init__(self, node_id, session, data, speed):
+        self.node_id = node_id
+        self.session = session
+        self.sim = session.sim
+        self.net = session.net
+        self.data = data
+        self.speed = speed
+        self.online = True
+        self.params = None
+        self.round = 1
+        self.trained = False
+        self.inbox: Dict[int, list] = {}
+
+    def start_round(self):
+        self.trained = False
+        dur = self.session.task.train_time(
+            self.data, batch_size=self.session.tcfg.batch_size,
+            epochs=1, speed=self.speed)
+        self.sim.schedule(dur, self.finish_train)
+
+    def finish_train(self):
+        if self.params is not None:
+            self.params = self.session.task.local_train(
+                self.params, self.data,
+                batch_size=self.session.tcfg.batch_size,
+                epochs=1, seed=self.round)
+        self.trained = True
+        # one-peer exponential graph: send to (i + 2^(k mod log2 n)) mod n
+        n = len(self.session.nodes)
+        hop = 2 ** (self.round % max(1, int(math.log2(n))))
+        dst = str((int(self.node_id) + hop) % n)
+        payload = (M.ModelPayload(params=self.params) if self.params is not None
+                   else M.ModelPayload(nbytes=self.session.task.model_bytes()))
+        m = M.AggregateMsg(sender=self.node_id, round_k=self.round,
+                           model=payload, view=None)
+        self.net.account_payload(m.model.size_bytes())
+        self.net.send(self.node_id, dst, m)
+        self.maybe_advance()
+
+    def receive(self, msg):
+        if isinstance(msg, M.AggregateMsg):
+            self.inbox.setdefault(msg.round_k, []).append(msg.model)
+            self.maybe_advance()
+
+    def maybe_advance(self):
+        if self.trained and self.inbox.get(self.round):
+            incoming = self.inbox.pop(self.round)
+            if self.params is not None:
+                self.params = self.session.task.aggregate(
+                    [self.params] + [m.params for m in incoming])
+            self.round += 1
+            self.session.on_round(self.node_id, self.round, self.params)
+            self.start_round()
+
+
+class DSGDSession:
+    """D-SGD on a one-peer exponential graph (Ying et al. 2021), as §4.3."""
+
+    def __init__(self, *, n_nodes: int, tcfg: TrainConfig, task: LearningTask,
+                 data: Optional[FederatedData] = None, bandwidth: float = 20e6,
+                 seed: int = 0, eval_every_rounds: int = 10):
+        self.sim = Simulator()
+        self.net = Network(self.sim, n_nodes, bandwidth=bandwidth, seed=seed)
+        self.tcfg, self.task = tcfg, task
+        self.eval_every = eval_every_rounds
+        self.data = data
+        self.result = SessionResult()
+        self._snapshots: Dict[int, list] = {}
+        speeds = _speeds(n_nodes, seed)
+        self.nodes: Dict[str, _DSGDNode] = {}
+        for i in range(n_nodes):
+            node = _DSGDNode(str(i), self,
+                             data.clients[i % len(data.clients)] if data else None,
+                             float(speeds[i]))
+            node.params = task.init_params(tcfg.seed) if data is not None else None
+            self.net.register(node)
+            self.nodes[str(i)] = node
+
+    def on_round(self, node_id: str, new_round: int, params) -> None:
+        if new_round % self.eval_every == 0 and params is not None:
+            self._snapshots.setdefault(new_round, [])
+            if len(self._snapshots[new_round]) < 8:   # sample of local models
+                self._snapshots[new_round].append((self.sim.now, params))
+        if node_id == "0":
+            self.result.round_times.append((self.sim.now, new_round))
+            self.result.rounds_completed = new_round
+
+    def run(self, duration: float) -> SessionResult:
+        for node in self.nodes.values():
+            node.start_round()
+        self.sim.run(until=duration)
+        if self.data is not None and self.data.test is not None:
+            for k, snaps in sorted(self._snapshots.items()):
+                metrics = [self.task.evaluate(p, self.data.test) for _, p in snaps]
+                t = max(t for t, _ in snaps)
+                mean = {key: float(np.mean([m[key] for m in metrics]))
+                        for key in metrics[0]}
+                std = {key + "_std": float(np.std([m[key] for m in metrics]))
+                       for key in metrics[0]}
+                self.result.history.append({"t": t, "round": k, **mean, **std})
+        self.result.usage = self.net.usage_summary()
+        self.result.overhead_fraction = self.net.overhead_fraction()
+        if self.result.history:
+            self.result.final_metrics = {
+                k: v for k, v in self.result.history[-1].items()
+                if k not in ("t", "round")}
+        return self.result
+
+
+# ---------------------------------------------------------------------------
+# Gossip Learning baseline (Ormándi et al.; paper §5): every node trains on
+# a fixed cadence and pushes its model to one random peer; the receiver
+# averages it into its local model. No rounds, no sampling, no aggregators.
+# ---------------------------------------------------------------------------
+
+
+class _GossipNode:
+    def __init__(self, node_id, session, data, speed, period):
+        self.node_id = node_id
+        self.session = session
+        self.sim = session.sim
+        self.net = session.net
+        self.data = data
+        self.speed = speed
+        self.period = period
+        self.online = True
+        self.params = None
+        self.cycles = 0
+
+    def start(self):
+        self.sim.schedule(self.period * (0.5 + 0.5 * (int(self.node_id) % 7) / 7),
+                          self.cycle)
+
+    def cycle(self):
+        if not self.online:
+            return
+        dur = self.session.task.train_time(
+            self.data, batch_size=self.session.tcfg.batch_size,
+            epochs=1, speed=self.speed)
+
+        def done():
+            if self.params is not None:
+                self.params = self.session.task.local_train(
+                    self.params, self.data,
+                    batch_size=self.session.tcfg.batch_size,
+                    epochs=1, seed=self.cycles)
+            self.cycles += 1
+            n = len(self.session.nodes)
+            dst = str(self.session.rng.integers(0, n))
+            payload = (M.ModelPayload(params=self.params)
+                       if self.params is not None else
+                       M.ModelPayload(nbytes=self.session.task.model_bytes()))
+            msg = M.AggregateMsg(sender=self.node_id, round_k=self.cycles,
+                                 model=payload, view=None)
+            self.net.account_payload(msg.model.size_bytes())
+            self.net.send(self.node_id, dst, msg)
+            self.session.on_cycle(self.node_id, self.cycles, self.params)
+            self.sim.schedule(self.period, self.cycle)
+
+        self.sim.schedule(dur, done)
+
+    def receive(self, msg):
+        if isinstance(msg, M.AggregateMsg) and msg.model.params is not None:
+            if self.params is not None:
+                self.params = self.session.task.aggregate(
+                    [self.params, msg.model.params])
+
+
+class GossipSession:
+    """Gossip Learning: fixed per-node cycle period (the tuning MoDeST's
+    push design removes — §3.6)."""
+
+    def __init__(self, *, n_nodes: int, tcfg: TrainConfig, task: LearningTask,
+                 data: Optional[FederatedData] = None, bandwidth: float = 20e6,
+                 seed: int = 0, eval_every_rounds: int = 10,
+                 period: float = 5.0):
+        self.sim = Simulator()
+        self.net = Network(self.sim, n_nodes, bandwidth=bandwidth, seed=seed)
+        self.tcfg, self.task = tcfg, task
+        self.eval_every = eval_every_rounds
+        self.data = data
+        self.rng = np.random.default_rng(seed)
+        self.result = SessionResult()
+        self._snapshots = {}
+        speeds = _speeds(n_nodes, seed)
+        self.nodes = {}
+        for i in range(n_nodes):
+            node = _GossipNode(str(i), self,
+                               data.clients[i % len(data.clients)] if data else None,
+                               float(speeds[i]), period)
+            node.params = task.init_params(tcfg.seed) if data is not None else None
+            self.net.register(node)
+            self.nodes[str(i)] = node
+
+    def on_cycle(self, node_id, cycle, params):
+        if node_id == "0":
+            self.result.round_times.append((self.sim.now, cycle))
+            self.result.rounds_completed = cycle
+            if cycle % self.eval_every == 0 and params is not None:
+                self._snapshots[cycle] = (self.sim.now, params)
+
+    def run(self, duration: float) -> SessionResult:
+        for node in self.nodes.values():
+            node.start()
+        self.sim.run(until=duration)
+        if self.data is not None and self.data.test is not None:
+            for k, (t, p) in sorted(self._snapshots.items()):
+                m = self.task.evaluate(p, self.data.test)
+                self.result.history.append({"t": t, "round": k, **m})
+        self.result.usage = self.net.usage_summary()
+        self.result.overhead_fraction = self.net.overhead_fraction()
+        if self.result.history:
+            self.result.final_metrics = {
+                k: v for k, v in self.result.history[-1].items()
+                if k not in ("t", "round")}
+        return self.result
+
+
+def fedavg_session(**kw) -> ModestSession:
+    """FedAvg emulation exactly as §4.3: a=1, fixed best-connected
+    aggregator, no sampling pings, sf=1."""
+    mcfg: ModestConfig = kw.pop("mcfg")
+    mcfg = ModestConfig(
+        n_nodes=mcfg.n_nodes, sample_size=mcfg.sample_size, n_aggregators=1,
+        success_fraction=1.0, ping_timeout=mcfg.ping_timeout,
+        activity_window=mcfg.activity_window, local_steps=mcfg.local_steps,
+        seed=mcfg.seed)
+    return ModestSession(mcfg=mcfg, fixed_aggregator=True, **kw)

@@ -1,0 +1,14 @@
+"""Shared utilities: pytree math, HLO inspection, logging."""
+
+from repro.utils.pytree import (  # noqa: F401
+    tree_add,
+    tree_axpy,
+    tree_cast,
+    tree_global_norm,
+    tree_num_params,
+    tree_scale,
+    tree_size_bytes,
+    tree_sub,
+    tree_weighted_mean,
+    tree_zeros_like,
+)

@@ -1,0 +1,173 @@
+"""HLO-text inspection for the roofline analysis.
+
+``compiled.cost_analysis()`` reports FLOPs/bytes with While (lax.scan)
+bodies counted ONCE — verified empirically (EXPERIMENTS.md §Dry-run
+methodology) — and it does not report collective traffic at all. This
+module therefore parses the compiled HLO text itself:
+
+* splits the module into named computations,
+* finds every ``while`` op and recovers its static trip count from the
+  loop-condition computation (jax scans compare the induction variable
+  against a literal),
+* attributes collective ops (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute) to their computation and multiplies by
+  the product of enclosing trip counts.
+
+That yields trip-aware collective byte totals — the §Roofline collective
+term. (FLOPs use the analytic model in ``repro.roofline``; raw
+cost_analysis numbers are recorded alongside for reference.)
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+(?:e\d+m\d+(?:fn)?)?|pred)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_INSTR_RE = re.compile(
+    r"=\s*(?P<shape>(?:\([^)]*\)|[a-z0-9\[\],{}:#\s]+?))\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<async>-start|-done)?\("
+)
+
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?\)\s*,\s*condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def split_computations(hlo_text: str) -> Dict[str, list]:
+    """computation name -> list of instruction lines."""
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _COMP_START_RE.match(stripped)
+        if m and stripped.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                comps["__entry__"] = comps[cur]
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _collectives_in(lines) -> dict:
+    totals: dict = defaultdict(int)
+    counts: dict = defaultdict(int)
+    for line in lines:
+        if "-done(" in line:
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        result_b = shape_bytes(m.group("shape"))
+        args = line[m.end():]
+        operand_b = shape_bytes(args.split("),", 1)[0] if ")," in args else args)
+        totals[op] += max(result_b, operand_b)
+        counts[op] += 1
+    return {"bytes": dict(totals), "counts": dict(counts)}
+
+
+def _trip_count(cond_lines) -> int:
+    """jax scans lower to conditions comparing the induction var against a
+    literal; the max integer constant in the condition is the trip count."""
+    consts = [int(c) for line in cond_lines for c in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Trip-count-aware collective byte totals for a compiled module."""
+    comps = split_computations(hlo_text)
+    if not comps:
+        flat = _collectives_in(hlo_text.splitlines())
+        return {**flat, "total_bytes": int(sum(flat["bytes"].values()))}
+
+    # map: computation -> [(body, trip)] for whiles it contains
+    calls: Dict[str, list] = defaultdict(list)
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                trip = _trip_count(comps.get(cond, []))
+                calls[name].append((body, trip))
+        # also attribute fusion/call sub-computations at multiplier 1
+        for cm in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", " ".join(lines)):
+            callee = cm.group(1)
+            if callee in comps:
+                calls[name].append((callee, 1))
+
+    entry_name = next((n for n, l in comps.items()
+                       if n != "__entry__" and l is comps.get("__entry__")),
+                      None)
+
+    memo: Dict[str, dict] = {}
+
+    def weight_of(name, depth=0) -> dict:
+        if name in memo or depth > 50:
+            return memo.get(name, {"bytes": {}, "counts": {}})
+        own = _collectives_in(comps.get(name, []))
+        agg_b = defaultdict(int, own["bytes"])
+        agg_c = defaultdict(int, own["counts"])
+        memo[name] = {"bytes": dict(agg_b), "counts": dict(agg_c)}  # cycle guard
+        for body, trip in calls.get(name, []):
+            sub = weight_of(body, depth + 1)
+            for k, v in sub["bytes"].items():
+                agg_b[k] += v * trip
+            for k, v in sub["counts"].items():
+                agg_c[k] += v * trip
+        memo[name] = {"bytes": dict(agg_b), "counts": dict(agg_c)}
+        return memo[name]
+
+    total = weight_of(entry_name) if entry_name else {"bytes": {}, "counts": {}}
+    return {
+        "bytes": total["bytes"],
+        "counts": total["counts"],
+        "total_bytes": int(sum(total["bytes"].values())),
+    }
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,72 @@
+"""Pytree arithmetic used by optimizers, aggregation and the protocol core.
+
+All functions are jit-compatible and dtype-preserving unless stated.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, alpha):
+    return jax.tree.map(lambda x: x * alpha, tree)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leaf-wise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_weighted_mean(trees, weights):
+    """Weighted mean of a list of pytrees.
+
+    This is the *reference* aggregation used by the protocol core; the
+    mesh path uses a masked mean over the participant axis and the Pallas
+    kernel in ``repro.kernels.aggregate`` implements the same contraction.
+
+    ``weights`` need not be normalized; zero-total weight raises.
+    """
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    total = jnp.sum(w)
+
+    def avg(*leaves):
+        stacked = jnp.stack([leaf.astype(jnp.float32) for leaf in leaves])
+        out = jnp.tensordot(w, stacked, axes=1) / total
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *trees)
+
+
+def tree_global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_num_params(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def tree_size_bytes(tree) -> int:
+    """Total byte size of a pytree of (abstract or concrete) arrays."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return total

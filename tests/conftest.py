@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run single-device on CPU (the 512-device forcing is exclusive to
+# launch/dryrun.py, which is its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

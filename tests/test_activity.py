@@ -1,0 +1,54 @@
+"""Alg. 3: activity estimates are monotone (logical-clock-like) and the
+candidate filter honors both the registry and the Δk window."""
+
+from hypothesis import given, strategies as st
+
+from repro.core.activity import ActivityTracker
+from repro.core.registry import JOINED, LEFT, Registry
+
+
+@given(st.lists(st.tuples(st.sampled_from("abcde"), st.integers(0, 100)),
+                max_size=50))
+def test_monotone(updates):
+    t = ActivityTracker()
+    seen = {}
+    for j, k in updates:
+        t.update(j, k)
+        seen[j] = max(seen.get(j, 0), k)
+        assert t.latest[j] == seen[j]
+
+
+@given(st.lists(st.tuples(st.sampled_from("abcde"), st.integers(0, 100)),
+                max_size=30),
+       st.lists(st.tuples(st.sampled_from("abcde"), st.integers(0, 100)),
+                max_size=30))
+def test_merge_is_max(u1, u2):
+    a, b = ActivityTracker(), ActivityTracker()
+    for j, k in u1:
+        a.update(j, k)
+    for j, k in u2:
+        b.update(j, k)
+    a.merge(b)
+    for j in a.latest:
+        expect = max([k for jj, k in u1 + u2 if jj == j])
+        assert a.latest[j] == expect
+
+
+def test_candidates_window_and_registry():
+    reg = Registry()
+    reg.update("fresh", 1, JOINED)
+    reg.update("stale", 1, JOINED)
+    reg.update("gone", 2, LEFT)
+    t = ActivityTracker()
+    t.update("fresh", 95)
+    t.update("stale", 10)     # outside Δk=20 at round 100
+    t.update("gone", 99)      # active but left
+    cands = t.candidates(reg, round_k=100, window=20)
+    assert cands == ["fresh"]
+
+
+def test_round_estimate_never_leads():
+    t = ActivityTracker()
+    t.update("a", 7)
+    t.update("b", 3)
+    assert t.round_estimate() == 7

@@ -1,0 +1,51 @@
+"""Checkpoint round-trips for nested pytrees (params + optimizer states)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint, configs, optim
+from repro.models import build
+
+
+def test_roundtrip_nested(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": [jnp.zeros((2, 2)), jnp.full((1,), 7.0)]}}
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, tree, meta={"round": 12})
+    back, meta = checkpoint.restore(path, tree)
+    assert meta["round"] == 12
+    for x, y in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_roundtrip_model_and_opt(tmp_path):
+    cfg = configs.reduced(configs.get_config("tinyllama-1.1b"))
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    opt = optim.momentum(0.1)
+    state = {"params": params, "opt": opt.init(params)}
+    path = str(tmp_path / "full")
+    checkpoint.save(path, state, meta={"arch": cfg.name})
+    back, meta = checkpoint.restore(path, state)
+    assert meta["arch"] == cfg.name
+    a = jax.tree.leaves(back)
+    b = jax.tree.leaves(state)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    tree = {"w": jnp.zeros((3, 3))}
+    path = str(tmp_path / "bad")
+    checkpoint.save(path, tree)
+    try:
+        checkpoint.restore(path, {"w": jnp.zeros((4, 4))})
+        raise AssertionError("should have raised")
+    except ValueError:
+        pass

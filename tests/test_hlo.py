@@ -1,0 +1,65 @@
+"""HLO analyzer: shape parsing and trip-count-aware collective accounting
+(the §Roofline collective term)."""
+
+from repro.utils.hlo import collective_bytes, shape_bytes, split_computations
+
+HLO = """\
+HloModule jit_step, num_partitions=8
+
+%region_body (param: (s32[], f32[4,128])) -> (s32[], f32[4,128]) {
+  %param = (s32[], f32[4,128]{1,0}) parameter(0)
+  %ag = f32[32,128]{1,0} all-gather(f32[4,128]{1,0} %x), dims={0}
+  %ar = f32[4,128]{1,0} all-reduce(f32[4,128]{1,0} %y), to_apply=%add
+  ROOT %t = (s32[], f32[4,128]{1,0}) tuple(%i, %z)
+}
+
+%region_cond (param.1: (s32[], f32[4,128])) -> pred[] {
+  %param.1 = (s32[], f32[4,128]{1,0}) parameter(0)
+  %c = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+}
+
+ENTRY %main (p0: f32[4,128]) -> f32[4,128] {
+  %w = (s32[], f32[4,128]{1,0}) while(%init), condition=%region_cond, body=%region_body
+  %arx = f32[4,128]{1,0} all-reduce(f32[4,128]{1,0} %q), to_apply=%add
+  ROOT %out = f32[4,128]{1,0} copy(%gte2)
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[4,128]{1,0}") == 4 * 128 * 4
+    assert shape_bytes("bf16[2,3]") == 12
+    assert shape_bytes("(f32[2], s8[4])") == 8 + 4
+    assert shape_bytes("f32[]") == 4
+
+
+def test_split_computations():
+    comps = split_computations(HLO)
+    assert "region_body" in comps
+    assert "region_cond" in comps
+    assert "__entry__" in comps
+
+
+def test_trip_count_multiplication():
+    res = collective_bytes(HLO)
+    ar_inside = 4 * 128 * 4          # per iteration
+    ag_inside = 32 * 128 * 4         # result bigger than operand
+    ar_entry = 4 * 128 * 4
+    assert res["bytes"]["all-gather"] == 12 * ag_inside
+    assert res["bytes"]["all-reduce"] == 12 * ar_inside + ar_entry
+    assert res["counts"]["all-reduce"] == 13
+    assert res["total_bytes"] == 12 * (ar_inside + ag_inside) + ar_entry
+
+
+def test_async_pairs_not_double_counted():
+    hlo = """\
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %s = f32[8]{0} all-gather-start(f32[1]{0} %x), dims={0}
+  %d = f32[8]{0} all-gather-done(f32[8]{0} %s)
+  ROOT %r = f32[8]{0} copy(%d)
+}
+"""
+    res = collective_bytes(hlo)
+    assert res["counts"]["all-gather"] == 1
+    assert res["bytes"]["all-gather"] == 32

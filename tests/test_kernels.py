@@ -1,0 +1,151 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + property tests
+(interpret mode on CPU, per the brief)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (aggregate_flat, aggregate_pytree, dequantize_flat,
+                           quantize_flat, quantized_delta_pull,
+                           quantized_delta_push)
+from repro.kernels import ref
+from repro.kernels.aggregate import TILE
+
+
+@pytest.mark.parametrize("P", [1, 2, 5, 16])
+@pytest.mark.parametrize("N", [128, TILE, TILE + 1, 3 * TILE - 7])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_aggregate_matches_ref(P, N, dtype):
+    key = jax.random.key(P * 1000 + N)
+    x = (jax.random.normal(key, (P, N)) * 3).astype(dtype)
+    w = jnp.abs(jax.random.normal(jax.random.key(1), (P,))) + 0.05
+    got = aggregate_flat(x, w)
+    want = ref.aggregate_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-3)
+
+
+def test_aggregate_masked_slots_ignored():
+    """weight-0 replicas must not influence the mean (sf semantics)."""
+    x = jnp.stack([jnp.ones(TILE), 100 * jnp.ones(TILE), 2 * jnp.ones(TILE)])
+    w = jnp.asarray([1.0, 0.0, 1.0])
+    got = aggregate_flat(x, w)
+    np.testing.assert_allclose(np.asarray(got), 1.5, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 3), st.integers(0, 5))
+def test_aggregate_pytree_property(P, leaves, seed):
+    key = jax.random.key(seed)
+    tree = {f"w{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                       (17 * (i + 1), 33))
+            for i in range(leaves)}
+    models = [jax.tree.map(lambda x: x + i, tree) for i in range(P)]
+    w = np.abs(np.random.default_rng(seed).normal(size=P)) + 0.1
+    got = aggregate_pytree(models, w)
+    from repro.utils.pytree import tree_weighted_mean
+    want = tree_weighted_mean(models, w)
+    for g, t in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(t),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("N", [100, TILE, 2 * TILE + 3])
+@pytest.mark.parametrize("scale", [1e-4, 1.0, 100.0])
+def test_quantize_roundtrip_bound(N, scale):
+    x = (jax.random.normal(jax.random.key(N), (N,)) * scale)
+    q, s = quantize_flat(x)
+    xr = dequantize_flat(q, s, n=N)
+    # error bounded by half a quantization step per tile
+    bound = float(jnp.max(s)) * 0.5 + 1e-9
+    assert float(jnp.max(jnp.abs(xr - x))) <= bound * 1.001
+
+
+def test_quantize_matches_ref():
+    N = 2 * TILE
+    x = jax.random.normal(jax.random.key(7), (N,))
+    q, s = quantize_flat(x)
+    qr, sr = ref.quantize_ref(x)
+    assert bool(jnp.all(q == qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(10, 4000), st.floats(1e-5, 1e3), st.integers(0, 99))
+def test_quantize_property(n, scale, seed):
+    x = (jax.random.normal(jax.random.key(seed), (n,)) * scale)
+    q, s = quantize_flat(x)
+    assert q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+    xr = dequantize_flat(q, s, n=n)
+    assert float(jnp.max(jnp.abs(xr - x))) <= float(jnp.max(s)) * 0.5 * 1.001
+
+
+def test_delta_push_pull_roundtrip():
+    key = jax.random.key(3)
+    theta = {"a": jax.random.normal(key, (333, 17)),
+             "b": {"c": jnp.linspace(-1, 1, 2048)}}
+    ref_t = jax.tree.map(lambda x: x * 0.95 + 0.01, theta)
+    codes, scales = quantized_delta_push(theta, ref_t)
+    back = quantized_delta_pull(codes, scales, ref_t)
+    for g, t in zip(jax.tree.leaves(back), jax.tree.leaves(theta)):
+        assert float(jnp.max(jnp.abs(g - t))) < 5e-3
+    # wire size: int8 codes = params bytes / 4 vs f32
+    n_params = sum(x.size for x in jax.tree.leaves(theta))
+    n_code_bytes = sum(x.size for x in jax.tree.leaves(codes))
+    assert n_code_bytes <= n_params + 2 * 16384   # padding slack
+
+
+# ---------------------------------------------------------------------------
+# flash attention (the §Perf follow-up kernel)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_attention import flash_attention  # noqa: E402
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,hd", [
+    (2, 4, 2, 256, 64),      # GQA group 2
+    (1, 8, 8, 128, 32),      # MHA
+    (2, 4, 1, 256, 128),     # MQA, MXU-aligned head dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, Hq, Hkv, S, hd, dtype):
+    ks = jax.random.split(jax.random.key(S + Hq), 3)
+    q = (jax.random.normal(ks[0], (B, Hq, S, hd)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, Hkv, S, hd)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, Hkv, S, hd)) * 0.5).astype(dtype)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64))
+    k = jax.random.normal(ks[1], (1, 2, 128, 64))
+    v = jax.random.normal(ks[2], (1, 2, 128, 64))
+    got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_block_shape_invariance():
+    """Different VMEM tilings must give the same math."""
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 1, 256, 64))
+    v = jax.random.normal(ks[2], (1, 1, 256, 64))
+    a = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    b = flash_attention(q, k, v, block_q=128, block_k=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,156 @@
+"""Per-architecture smoke tests (reduced configs, brief §f): one forward /
+train-step on CPU asserting output shapes + no NaNs, plus decode-path
+consistency for the dense families."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import build
+
+ARCHS = configs.ASSIGNED
+
+
+def make_batch(cfg, B=2, S=16, key=None):
+    key = key or jax.random.key(1)
+    ks = jax.random.split(key, 3)
+    toks = jax.random.randint(ks[0], (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[1], (B, cfg.n_frames, cfg.d_model)) * 0.1
+    if cfg.family == "vlm":
+        n_img = cfg.image_tokens * cfg.anyres_tiles
+        batch["image_embeds"] = jax.random.normal(
+            ks[2], (B, n_img, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = configs.reduced(configs.get_config(arch))
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.family == "moe":
+        assert cfg.moe_num_experts <= 4
+    m = build(cfg)
+    params = m.init(jax.random.key(0))
+    batch = make_batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        m.loss_fn, has_aux=True)(params, batch)
+    assert jnp.isfinite(loss), arch
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert gnorm > 0 and jnp.isfinite(gnorm), arch
+    # one SGD step lowers nothing NaN
+    new = jax.tree.map(lambda p, g: p - 0.01 * g, params, grads)
+    loss2, _ = m.loss_fn(new, batch)
+    assert jnp.isfinite(loss2), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_path(arch):
+    cfg = configs.reduced(configs.get_config(arch))
+    m = build(cfg)
+    params = m.init(jax.random.key(0))
+    B, S = 2, 12
+    batch = make_batch(cfg, B=B, S=S)
+    n_img = (cfg.image_tokens * cfg.anyres_tiles if cfg.family == "vlm" else 0)
+    cache = m.init_cache(B, S + n_img + 4)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, : S - 1]
+    logits_p, cache = m.prefill(params, pre, cache)
+    assert logits_p.shape == (B, 1, cfg.vocab)
+    logits_d, cache = m.decode_step(params, batch["tokens"][:, S - 1:S], cache)
+    assert logits_d.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits_d)))
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "gemma2-27b",
+                                  "starcoder2-15b", "llama3-405b",
+                                  "rwkv6-1.6b", "hymba-1.5b"])
+def test_decode_matches_full_forward(arch):
+    """prefill(S-1) + decode(1) must equal the full-forward next-token
+    distribution (exact cache correctness)."""
+    cfg = configs.reduced(configs.get_config(arch))
+    m = build(cfg)
+    params = m.init(jax.random.key(0))
+    B, S = 2, 14
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    cache = m.init_cache(B, S + 2)
+    _, cache = m.prefill(params, {"tokens": toks[:, : S - 1]}, cache)
+    logits_d, _ = m.decode_step(params, toks[:, S - 1: S], cache)
+
+    full_loss_logits = _full_next_logits(m, cfg, params, toks)
+    err = float(jnp.max(jnp.abs(full_loss_logits - logits_d[:, 0])))
+    assert err < 5e-2, (arch, err)
+
+
+def _full_next_logits(m, cfg, params, toks):
+    if cfg.family in ("dense",):
+        from repro.models import transformer as T
+        x = T.embed_tokens(params, cfg, toks)
+        h = T.stack_forward(params, cfg, x, jnp.arange(toks.shape[1]))
+        return T.logits_fn(params, cfg, h)[:, -1]
+    # ssm / hybrid: rerun prefill over the whole sequence
+    cache = m.init_cache(toks.shape[0], toks.shape[1] + 2)
+    logits, _ = m.prefill(params, {"tokens": toks}, cache)
+    return logits[:, -1]
+
+
+def test_moe_load_balance_loss_present():
+    cfg = configs.reduced(configs.get_config("qwen3-moe-30b-a3b"))
+    m = build(cfg)
+    params = m.init(jax.random.key(0))
+    _, metrics = m.loss_fn(params, make_batch(cfg))
+    assert "aux_loss" in metrics and jnp.isfinite(metrics["aux_loss"])
+    # balanced router at init: aux ~ 1.0 (E * mean(frac*prob) with uniform)
+    assert 0.3 < float(metrics["aux_loss"]) < 4.0
+
+
+def test_gemma2_softcap_bounds_logits():
+    cfg = configs.reduced(configs.get_config("gemma2-27b"))
+    m = build(cfg)
+    params = m.init(jax.random.key(0))
+    batch = make_batch(cfg)
+    from repro.models import transformer as T
+    x = T.embed_tokens(params, cfg, batch["tokens"])
+    h = T.stack_forward(params, cfg, x, jnp.arange(batch["tokens"].shape[1]))
+    logits = T.logits_fn(params, cfg, h)
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_softcap + 1e-3
+
+
+def test_rwkv_state_is_constant_size():
+    cfg = configs.reduced(configs.get_config("rwkv6-1.6b"))
+    m = build(cfg)
+    c1 = m.init_cache(2, 100)
+    c2 = m.init_cache(2, 100_000)
+    s1 = sum(x.size for x in jax.tree.leaves(c1))
+    s2 = sum(x.size for x in jax.tree.leaves(c2))
+    assert s1 == s2              # O(1) state: the long_500k advantage
+
+
+def test_flash_attention_model_path_equivalent():
+    """cfg.use_flash must not change the math (kernel vs XLA attention)."""
+    import jax.numpy as jnp
+    cfg = configs.reduced(configs.get_config("tinyllama-1.1b")).with_(window=0)
+    m_std = build(cfg)
+    m_flash = build(cfg.with_(use_flash=True))
+    params = m_std.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 128), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    l1, _ = m_std.loss_fn(params, batch)
+    l2, _ = m_flash.loss_fn(params, batch)
+    assert abs(float(l1 - l2)) < 1e-3
+
+
+def test_chunked_xent_equivalent():
+    """cfg.xent_chunk must not change the loss."""
+    cfg = configs.reduced(configs.get_config("tinyllama-1.1b"))
+    m_std = build(cfg)
+    m_chunk = build(cfg.with_(xent_chunk=8))
+    params = m_std.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    l1, _ = m_std.loss_fn(params, batch)
+    l2, _ = m_chunk.loss_fn(params, batch)
+    assert abs(float(l1 - l2)) < 1e-4

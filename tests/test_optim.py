@@ -1,0 +1,64 @@
+"""Optimizer correctness: descent on a quadratic, bias correction, Yogi
+update rule, clipping, schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.config import TrainConfig
+
+
+def quad_loss(p):
+    return jnp.sum((p["x"] - 3.0) ** 2) + jnp.sum((p["y"] + 1.0) ** 2)
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("sgd", dict(lr=0.1)),
+    ("momentum", dict(lr=0.05, beta=0.9)),
+    ("adamw", dict(lr=0.3)),
+    ("yogi", dict(lr=0.3)),
+])
+def test_descends_quadratic(name, kw):
+    opt = getattr(optim, name)(**kw)
+    params = {"x": jnp.zeros(3), "y": jnp.ones(2)}
+    state = opt.init(params)
+    l0 = float(quad_loss(params))
+    for _ in range(120):
+        g = jax.grad(quad_loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = optim.apply_updates(params, upd)
+    assert float(quad_loss(params)) < 0.05 * l0
+
+
+def test_clip_by_global_norm():
+    opt = optim.clip_by_global_norm(optim.sgd(1.0), max_norm=1.0)
+    params = {"x": jnp.zeros(4)}
+    g = {"x": jnp.full((4,), 100.0)}
+    upd, _ = opt.update(g, opt.init(params), params)
+    assert float(jnp.linalg.norm(upd["x"])) <= 1.0 + 1e-5
+
+
+def test_cosine_schedule():
+    sched = optim.cosine_schedule(1.0, total_steps=100, warmup=10)
+    assert float(sched(0)) == 0.0
+    assert abs(float(sched(10)) - 1.0) < 1e-6
+    assert float(sched(100)) < 1e-6
+    assert float(sched(55)) < float(sched(20))
+
+
+def test_build_from_config():
+    for name in ("sgd", "momentum", "adamw", "yogi"):
+        opt = optim.build(TrainConfig(optimizer=name, lr=0.01, grad_clip=1.0))
+        p = {"w": jnp.ones(3)}
+        upd, _ = opt.update({"w": jnp.ones(3)}, opt.init(p), p)
+        assert jnp.all(jnp.isfinite(upd["w"]))
+
+
+def test_server_optimizer_build():
+    tcfg = TrainConfig(server_optimizer="yogi", server_lr=0.1)
+    opt = optim.build(tcfg, server=True)
+    p = {"w": jnp.ones(3)}
+    upd, st = opt.update({"w": jnp.ones(3) * 0.1}, opt.init(p), p)
+    assert jnp.all(jnp.isfinite(upd["w"]))

@@ -1,0 +1,81 @@
+"""Alg. 2 registry is a last-writer-wins CRDT: merge must be commutative,
+associative, idempotent, and converge regardless of delivery order."""
+
+from hypothesis import given, strategies as st
+
+from repro.core.registry import JOINED, LEFT, Registry
+
+event = st.tuples(st.sampled_from(["a", "b", "c", "d", "e"]),
+                  st.integers(1, 20),
+                  st.sampled_from([JOINED, LEFT]))
+events = st.lists(event, max_size=40)
+
+
+def reg_from(evs) -> Registry:
+    r = Registry()
+    for j, c, e in evs:
+        r.update(j, c, e)
+    return r
+
+
+def as_dict(r: Registry):
+    return (dict(r.events), dict(r.counters))
+
+
+@given(events, events)
+def test_merge_commutative(e1, e2):
+    a, b = reg_from(e1), reg_from(e2)
+    ab = reg_from(e1)
+    ab.merge(b)
+    ba = reg_from(e2)
+    ba.merge(a)
+    assert as_dict(ab) == as_dict(ba)
+
+
+@given(events, events, events)
+def test_merge_associative(e1, e2, e3):
+    def merged(order):
+        r = Registry()
+        for evs in order:
+            r.merge(reg_from(evs))
+        return as_dict(r)
+
+    assert merged([e1, e2, e3]) == merged([e3, e1, e2])
+
+
+@given(events)
+def test_merge_idempotent(e1):
+    a = reg_from(e1)
+    before = as_dict(a)
+    a.merge(reg_from(e1))
+    assert as_dict(a) == before
+
+
+@given(events)
+def test_highest_counter_wins(e1):
+    r = reg_from(e1)
+    for j in r.counters:
+        best = max(c for (jj, c, _e) in e1 if jj == j)
+        assert r.counters[j] == best
+        # the stored event is one of the max-counter events for j
+        assert r.events[j] in {e for (jj, c, e) in e1
+                               if jj == j and c == best}
+
+
+@given(events)
+def test_registered_iff_latest_joined(e1):
+    r = reg_from(e1)
+    for j in r.registered():
+        assert r.events[j] == JOINED
+
+
+def test_update_rejects_stale():
+    r = Registry()
+    assert r.update("x", 5, JOINED)
+    assert not r.update("x", 3, LEFT)       # older counter: rejected
+    assert r.events["x"] == JOINED
+    assert r.update("x", 5, LEFT)           # tie: breaks toward 'left'
+    assert not r.update("x", 5, JOINED)     # ...and never back
+    assert not r.is_registered("x")
+    assert r.update("x", 6, JOINED)
+    assert r.is_registered("x")

@@ -1,0 +1,66 @@
+"""Analytic roofline model: exact param accounting, MoE active scaling,
+shape-kind behaviour."""
+
+import pytest
+
+from repro import configs
+from repro.config import SHAPES
+from repro.roofline import analytic_terms, param_stats
+
+
+def test_param_counts_match_tree():
+    import jax
+    from repro.models import build
+    from repro.utils.pytree import tree_num_params
+
+    cfg = configs.reduced(configs.get_config("tinyllama-1.1b"))
+    stats = param_stats(cfg)
+    model = build(cfg)
+    tree = jax.eval_shape(model.init, jax.random.key(0))
+    assert stats["total"] == tree_num_params(tree)
+
+
+def test_moe_active_smaller_than_matmul():
+    cfg = configs.get_config("qwen3-moe-30b-a3b")
+    ps = param_stats(cfg)
+    assert ps["active"] < 0.3 * ps["matmul"]      # top-8 of 128 experts
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+def test_terms_positive_all_shapes(arch):
+    cfg = configs.get_config(arch)
+    for shape in SHAPES.values():
+        t = analytic_terms(cfg, shape, n_participants=16,
+                           collective_total_bytes=10 ** 9, chips=256)
+        assert t["flops"] > 0 and t["hbm_bytes"] > 0
+        assert 0 < t["useful_flop_ratio"] <= 1.0001
+        assert t["dominant"] in ("compute", "memory", "collective")
+
+
+def test_decode_memory_dominated():
+    """Single-token decode must be memory-bound (params streaming)."""
+    cfg = configs.get_config("tinyllama-1.1b")
+    t = analytic_terms(cfg, SHAPES["decode_32k"], n_participants=1,
+                       collective_total_bytes=0, chips=256)
+    assert t["memory_s"] > t["compute_s"]
+
+
+def test_window_reduces_decode_flops():
+    cfg = configs.get_config("llama3-405b")
+    full = analytic_terms(cfg, SHAPES["long_500k"], n_participants=1,
+                          collective_total_bytes=0, chips=256)
+    windowed = analytic_terms(cfg.with_(window=8192), SHAPES["long_500k"],
+                              n_participants=1, collective_total_bytes=0,
+                              chips=256)
+    assert windowed["flops"] < full["flops"]
+    assert windowed["hbm_bytes"] < full["hbm_bytes"]
+
+
+def test_train_flops_scale_6nd():
+    cfg = configs.get_config("starcoder2-15b")
+    sh = SHAPES["train_4k"]
+    t = analytic_terms(cfg, sh, n_participants=16,
+                       collective_total_bytes=0, chips=256)
+    model = 6.0 * param_stats(cfg)["active"] * sh.global_batch * sh.seq_len
+    assert abs(t["model_flops"] - model) / model < 1e-6
+    assert t["flops"] >= t["model_flops"]

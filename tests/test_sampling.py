@@ -1,0 +1,65 @@
+"""Alg. 1 properties: determinism, cross-node consistency, and the
+*mostly-consistent* guarantee under view divergence."""
+
+import string
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import sample_order, select_aggregators, select_sample
+
+ids = st.lists(st.text(string.ascii_lowercase + string.digits, min_size=1,
+                       max_size=12), min_size=1, max_size=60, unique=True)
+
+
+@given(ids, st.integers(0, 10_000))
+def test_order_deterministic(candidates, k):
+    assert sample_order(candidates, k) == sample_order(list(candidates), k)
+
+
+@given(ids, st.integers(0, 10_000))
+def test_order_is_permutation(candidates, k):
+    assert sorted(sample_order(candidates, k)) == sorted(candidates)
+
+
+@given(ids, st.integers(0, 1000), st.integers(1, 20))
+def test_consistent_views_consistent_samples(candidates, k, s):
+    """Two nodes with identical views derive identical samples — the FL
+    server's single sample, decentralized."""
+    a = select_sample(candidates, k, s)
+    b = select_sample(sorted(candidates), k, s)   # different iteration order
+    assert a == b
+
+
+@given(ids, st.integers(0, 1000))
+def test_rounds_randomize_order(candidates, k):
+    """Different rounds give (generally) different orders: the round number
+    is part of the hash (paper §3.3)."""
+    if len(candidates) < 10:
+        return
+    orders = {tuple(sample_order(candidates, k + i)) for i in range(6)}
+    assert len(orders) > 1
+
+
+@settings(max_examples=200)
+@given(ids, st.integers(0, 1000), st.integers(1, 10),
+       st.data())
+def test_mostly_consistent_under_divergence(candidates, k, missing, data):
+    """If node B's view misses `missing` entries of node A's view, their
+    samples differ by at most `missing` elements (mostly-consistent)."""
+    s = data.draw(st.integers(1, max(1, len(candidates))))
+    b_view = candidates[:-missing] if missing < len(candidates) else candidates[:1]
+    sa = set(select_sample(candidates, k, s))
+    sb = set(select_sample(b_view, k, s))
+    assert len(sa - sb) <= missing
+
+
+@given(ids, st.integers(0, 1000), st.integers(1, 5))
+def test_aggregators_prefix_of_sample(candidates, k, a):
+    """§3.6: aggregators are the first `a` of the same hashed order, so
+    A^k ⊆ S^k whenever s ≥ a."""
+    s = min(len(candidates), a + 3)
+    if s < a:
+        return
+    sample = select_sample(candidates, k, s)
+    aggs = select_aggregators(candidates, k, a)
+    assert aggs == sample[:a]

@@ -1,0 +1,66 @@
+"""Sharding policy invariants for every (arch × mesh): all emitted specs
+divide their dims (the dry-run proves lowering; this is the fast guard)."""
+
+import jax
+import pytest
+
+from repro import configs
+from repro.config import MeshConfig
+from repro.core.distributed import DistributedTrainer
+from repro.config import TrainConfig
+from repro.sharding import ShardingPolicy
+
+MESHES = [MeshConfig(multi_pod=False), MeshConfig(multi_pod=True)]
+
+
+def axis_size(policy, axis):
+    return policy._axes_size(axis)
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divide(arch, multi_pod):
+    cfg = configs.get_config(arch)
+    mcfg = MeshConfig(multi_pod=multi_pod)
+    policy = ShardingPolicy(cfg, mcfg)
+    trainer = DistributedTrainer(cfg, TrainConfig(), mcfg, strategy="modest")
+    state = trainer.abstract_state()
+    specs = trainer.state_spec(state)
+
+    flat_v = jax.tree_util.tree_leaves(state.params)
+    flat_s = jax.tree_util.tree_leaves(
+        specs.params, is_leaf=lambda x: isinstance(
+            x, jax.sharding.PartitionSpec))
+    assert len(flat_v) == len(flat_s)
+    for leaf, spec in zip(flat_v, flat_s):
+        for dim, axis in zip(leaf.shape, tuple(spec)):
+            assert dim % axis_size(policy, axis) == 0, (arch, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["llama3-405b", "arctic-480b"])
+def test_pod_granularity_participants(arch):
+    cfg = configs.get_config(arch)
+    assert cfg.participant_granularity == "pod"
+    single = ShardingPolicy(cfg, MeshConfig(multi_pod=False))
+    multi = ShardingPolicy(cfg, MeshConfig(multi_pod=True))
+    assert single.n_participants == 1
+    assert multi.n_participants == 2
+    assert single.fsdp_axis == "data"
+
+
+def test_data_rank_participants():
+    cfg = configs.get_config("tinyllama-1.1b")
+    assert ShardingPolicy(cfg, MeshConfig()).n_participants == 16
+    assert ShardingPolicy(cfg, MeshConfig(multi_pod=True)).n_participants == 32
+
+
+@pytest.mark.parametrize("arch", ["whisper-large-v3", "hymba-1.5b"])
+def test_odd_vocab_replicated_not_failed(arch):
+    """51866 / 32001 vocabs must not be sharded over a 16-way axis."""
+    cfg = configs.get_config(arch)
+    policy = ShardingPolicy(cfg, MeshConfig())
+    import jax.numpy as jnp
+    template = {"embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model),
+                                              jnp.bfloat16)}
+    spec = policy.param_spec(template, with_participants=False)["embed"]
+    assert tuple(spec)[0] is None

@@ -1,0 +1,79 @@
+"""Aggregation-strategy math (the mesh form of the protocol): masked means,
+server optimizers, D-SGD neighbour mixing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import TrainConfig
+from repro.core.strategy import build_strategy
+
+
+def stacked(P, shape=(4,)):
+    return {"w": jnp.stack([jnp.full(shape, float(i)) for i in range(P)])}
+
+
+def test_modest_masked_mean_broadcast():
+    s = build_strategy("modest", TrainConfig())
+    new = stacked(4)
+    w = jnp.asarray([1.0, 1.0, 0.0, 0.0])      # sf: two slots failed
+    out, _ = s.mix(new, new, w, (), 1)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.full((4, 4), 0.5))  # mean of 0,1 only
+
+
+def test_modest_weighted():
+    s = build_strategy("modest", TrainConfig())
+    new = stacked(3)
+    w = jnp.asarray([1.0, 2.0, 1.0])
+    out, _ = s.mix(new, new, w, (), 1)
+    np.testing.assert_allclose(np.asarray(out["w"][0]),
+                               np.full(4, (0 + 2 + 2) / 4.0))
+
+
+def test_dsgd_one_peer_exchange():
+    s = build_strategy("dsgd", TrainConfig())
+    new = stacked(4)
+    out, _ = s.mix(new, new, jnp.ones(4), (), hop=1)
+    # slot p mixes with slot p+1 (mod P)
+    np.testing.assert_allclose(np.asarray(out["w"][:, 0]),
+                               [0.5, 1.5, 2.5, 1.5])
+
+
+def test_dsgd_hop_changes_neighbor():
+    s = build_strategy("dsgd", TrainConfig())
+    new = stacked(8)
+    o1, _ = s.mix(new, new, jnp.ones(8), (), hop=1)
+    o2, _ = s.mix(new, new, jnp.ones(8), (), hop=2)
+    assert not np.allclose(np.asarray(o1["w"]), np.asarray(o2["w"]))
+
+
+def test_local_identity():
+    s = build_strategy("local", TrainConfig())
+    new = stacked(3)
+    out, _ = s.mix(new, new, jnp.ones(3), (), 1)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(new["w"]))
+
+
+def test_fedavg_server_yogi_moves_toward_avg():
+    tcfg = TrainConfig(server_optimizer="yogi", server_lr=0.5)
+    s = build_strategy("fedavg", tcfg)
+    prev = {"w": jnp.zeros((4, 3))}
+    new = {"w": jnp.ones((4, 3))}
+    state = s.init_state(prev)
+    out, state = s.mix(prev, new, jnp.ones(4), state, 1)
+    v = np.asarray(out["w"])
+    assert np.all(v > 0.0) and np.all(v <= 1.5)     # moved toward the avg
+    assert np.allclose(v, v[0])                     # broadcast consistent
+
+
+def test_modest_equals_fedavg_math():
+    """§3.2: a fixed aggregator makes MoDeST equivalent to FL — the mix
+    math is identical; only the host-side protocol differs."""
+    m = build_strategy("modest", TrainConfig())
+    f = build_strategy("fedavg", TrainConfig())
+    new = stacked(5)
+    w = jnp.asarray([1, 0, 1, 1, 0], jnp.float32)
+    om, _ = m.mix(new, new, w, (), 1)
+    of, _ = f.mix(new, new, w, (), 1)
+    np.testing.assert_array_equal(np.asarray(om["w"]), np.asarray(of["w"]))

@@ -1,0 +1,75 @@
+"""End-to-end system behaviour: real learning through the full protocol
+stack — the paper's central claims at test scale.
+
+These use the CNN task (the paper's own model class) on synthetic non-IID
+data; they are the slowest tests in the suite (~1 min total)."""
+
+import numpy as np
+import pytest
+
+from repro.config import ModestConfig, TrainConfig
+from repro.data import make_classification_task
+from repro.models.tasks import cnn_task
+from repro.sim.runner import DSGDSession, ModestSession, fedavg_session
+
+N_NODES = 16
+MCFG = ModestConfig(n_nodes=N_NODES, sample_size=4, n_aggregators=2,
+                    success_fraction=1.0, ping_timeout=1.0)
+TCFG = TrainConfig(batch_size=20)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_classification_task(N_NODES, samples_per_node=40,
+                                    iid=False, alpha=0.5, seed=0)
+
+
+@pytest.fixture(scope="module")
+def task():
+    return cnn_task()
+
+
+def test_modest_learns(data, task):
+    res = ModestSession(n_nodes=N_NODES, mcfg=MCFG, tcfg=TCFG, task=task,
+                        data=data, seed=0, eval_every_rounds=10).run(90.0)
+    accs = [h["accuracy"] for h in res.history if "accuracy" in h]
+    assert len(accs) >= 2
+    assert accs[-1] > 0.25, accs          # well above 10% random for 10 classes
+    assert accs[-1] > accs[0]
+
+
+def test_modest_tracks_fedavg(data, task):
+    """Fig. 3: MoDeST converges comparably to FedAvg in the same time."""
+    rm = ModestSession(n_nodes=N_NODES, mcfg=MCFG, tcfg=TCFG, task=task,
+                       data=data, seed=0, eval_every_rounds=10).run(90.0)
+    rf = fedavg_session(n_nodes=N_NODES, mcfg=MCFG, tcfg=TCFG, task=task,
+                        data=data, seed=0, eval_every_rounds=10).run(90.0)
+    am = rm.final_metrics.get("accuracy", 0)
+    af = rf.final_metrics.get("accuracy", 0)
+    assert am > 0.7 * af, (am, af)
+
+
+def test_modest_beats_dsgd_on_communication(data, task):
+    """Table 4: MoDeST total network usage well below D-SGD's."""
+    rm = ModestSession(n_nodes=N_NODES, mcfg=MCFG, tcfg=TCFG, task=task,
+                       data=data, seed=0).run(60.0)
+    rd = DSGDSession(n_nodes=N_NODES, tcfg=TCFG, task=task,
+                     data=data, seed=0).run(60.0)
+    assert rd.usage["total_bytes"] > 1.3 * rm.usage["total_bytes"]
+
+
+def test_learning_survives_crashes(data, task):
+    """Fig. 6 at test scale: crash half the nodes mid-training; the global
+    model must keep improving afterwards."""
+    mcfg = ModestConfig(n_nodes=N_NODES, sample_size=4, n_aggregators=2,
+                        success_fraction=0.75, ping_timeout=1.0)
+    s = ModestSession(n_nodes=N_NODES, mcfg=mcfg, tcfg=TCFG, task=task,
+                      data=data, seed=0, eval_every_rounds=10)
+    rng = np.random.default_rng(1)
+    for i, v in enumerate(rng.choice(N_NODES, size=N_NODES // 2, replace=False)):
+        s.schedule_crash(20.0 + 2.0 * i, str(v))
+    res = s.run(120.0)
+    late_rounds = [k for t, k in res.round_times if t > 50.0]
+    assert late_rounds and max(late_rounds) > min(late_rounds) + 5
+    accs = [h["accuracy"] for h in res.history if "accuracy" in h]
+    assert accs and accs[-1] > 0.2
