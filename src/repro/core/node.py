@@ -114,6 +114,10 @@ class ModestNode:
 
     def crash(self) -> None:
         self.online = False
+        if self._train_handle is not None:     # the process died mid-train
+            self._train_handle.cancel()
+            self._train_handle = None
+            self._train_round_pending = None
 
     def recover(self) -> None:
         self.online = True
@@ -197,6 +201,8 @@ class ModestNode:
 
     def _stall_aggregate(self, k: int) -> None:
         self._stall_handle = None
+        if not self.online:
+            return
         if k == self.k_agg and k not in self._agg_models_done and self._theta_list:
             self._do_aggregate(k)
 
@@ -219,6 +225,8 @@ class ModestNode:
         t0 = self.sim.now
 
         def send_train(sample: List[str]) -> None:
+            if not self.online:                # crashed while sampling
+                return
             self.sample_durations.append((t0, self.sim.now - t0))
             v = self.view()
             for j in sample:
@@ -259,6 +267,8 @@ class ModestNode:
         def finish() -> None:
             self._train_handle = None
             self._train_round_pending = None
+            if not self.online:                # crashed mid-train: drop work
+                return
             if k != self.k_train or k in self._train_done:
                 return
             self._train_done.add(k)

@@ -44,14 +44,14 @@ def main():
     if not args.full_size:
         cfg = configs.reduced(cfg)
 
+    from repro.utils.compat import make_mesh, set_mesh
+
     if args.devices:
         mp = args.model_parallel
-        mesh = jax.make_mesh((jax.device_count() // mp, mp), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((jax.device_count() // mp, mp), ("data", "model"))
         mesh_cfg = MeshConfig(data=jax.device_count() // mp, model=mp)
     else:
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("data", "model"))
         mesh_cfg = MeshConfig(data=1, model=1)
 
     server = Server(cfg, mesh_cfg, mesh=mesh)
@@ -59,7 +59,7 @@ def main():
     if cfg.family == "vlm":
         max_len += cfg.image_tokens * cfg.anyres_tiles
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = server.shard_params(server.model.init(jax.random.key(args.seed)))
         cache = server.shard_cache(server.model.init_cache(args.batch, max_len))
         batch = {"tokens": jax.random.randint(

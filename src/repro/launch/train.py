@@ -113,8 +113,8 @@ def run_mesh(args) -> None:
     model_par = args.model_parallel
     data_par = n_dev // model_par
     mesh_cfg = MeshConfig(multi_pod=False, data=data_par, model=model_par)
-    mesh = jax.make_mesh((data_par, model_par), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.utils.compat import make_mesh, set_mesh
+    mesh = make_mesh((data_par, model_par), ("data", "model"))
 
     cfg = configs.get_config(args.arch)
     if not args.full_size:
@@ -132,7 +132,7 @@ def run_mesh(args) -> None:
                         vocab=cfg.vocab, seed=args.seed)
     rng = np.random.default_rng(args.seed)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state = trainer.init_state(args.seed)
         step = trainer.jit_train_step(
             batch_template=jax.tree.map(

@@ -10,5 +10,6 @@ simulates time for its DL comparisons, §4.2). Provides:
 * :mod:`repro.sim.runner` — session drivers for MoDeST / FedAvg / D-SGD
 """
 
+from repro.sim.churn import AvailabilityDriver  # noqa: F401
 from repro.sim.clock import Simulator  # noqa: F401
 from repro.sim.network import Network, wan_latency_matrix  # noqa: F401

@@ -32,14 +32,26 @@ def wan_latency_matrix(n_cities: int = 227, seed: int = 7) -> np.ndarray:
 
 
 class Network:
-    """Message fabric with latency + bandwidth delays and byte accounting."""
+    """Message fabric with latency + capacity delays and byte accounting.
+
+    Capacity is per-link: a flow src→dst runs at
+    ``min(uplink[src], downlink[dst])``. The legacy single ``bandwidth``
+    scalar remains the symmetric default when no per-node arrays (or
+    :class:`~repro.traces.profile.TraceProfile`) are supplied.
+    """
 
     def __init__(self, sim, n_nodes: int, *, latency: Optional[np.ndarray] = None,
-                 bandwidth: float = 20e6, seed: int = 0):
+                 bandwidth: float = 20e6, uplink: Optional[np.ndarray] = None,
+                 downlink: Optional[np.ndarray] = None,
+                 city: Optional[np.ndarray] = None, seed: int = 0):
         self.sim = sim
         self.bandwidth = bandwidth   # bytes/s per flow (paper: WAN uplink)
+        self._uplink = None if uplink is None else np.asarray(uplink, float)
+        self._downlink = (None if downlink is None
+                          else np.asarray(downlink, float))
         lat = latency if latency is not None else wan_latency_matrix(seed=seed)
-        cities = np.arange(n_nodes) % len(lat)          # round-robin (§4.2)
+        cities = (np.asarray(city) if city is not None
+                  else np.arange(n_nodes) % len(lat))  # round-robin (§4.2)
         self._lat = lat
         self._city = cities
         self.nodes: Dict[str, object] = {}
@@ -49,13 +61,49 @@ class Network:
         self.bytes_by_type = defaultdict(int)
         self.msgs_by_type = defaultdict(int)
 
+    _profile = None     # set by from_profile: the single source of truth
+
+    @classmethod
+    def from_profile(cls, sim, profile) -> "Network":
+        """Build the fabric from a TraceProfile; latency and capacity
+        queries delegate to the profile so the semantics live in one
+        place (the raw-array constructor path remains for ad-hoc use)."""
+        net = cls(sim, profile.n, latency=profile.latency,
+                  uplink=profile.uplink, downlink=profile.downlink,
+                  city=profile.city, seed=profile.seed)
+        net._profile = profile
+        return net
+
     def register(self, node) -> None:
         self.nodes[node.node_id] = node
 
     def latency(self, src: str, dst: str) -> float:
+        if self._profile is not None:
+            return self._profile.pair_latency(src, dst)
         i = self._city[int(src) % len(self._city)]
         j = self._city[int(dst) % len(self._city)]
         return float(self._lat[i, j])
+
+    def link_capacity(self, src: str, dst: str) -> float:
+        """Bytes/s available to one src→dst flow.
+
+        Per-node arrays fully replace the scalar: supplying either array
+        switches to per-link mode, where each missing direction is simply
+        unconstrained (the scalar must not silently cap profile links).
+        """
+        if self._profile is not None:
+            return self._profile.link_capacity(src, dst)
+        if self._uplink is None and self._downlink is None:
+            return self.bandwidth
+        cap = float("inf")
+        if self._uplink is not None:
+            cap = float(self._uplink[int(src) % len(self._uplink)])
+        if self._downlink is not None:
+            cap = min(cap, float(self._downlink[int(dst) % len(self._downlink)]))
+        return cap
+
+    def transfer_time(self, src: str, dst: str, nbytes: int) -> float:
+        return nbytes / self.link_capacity(src, dst)
 
     def send(self, src: str, dst: str, msg) -> None:
         size = msg.size_bytes()
@@ -65,7 +113,7 @@ class Network:
         node = self.nodes.get(dst)
         if node is None:
             return
-        delay = self.latency(src, dst) + size / self.bandwidth
+        delay = self.latency(src, dst) + self.transfer_time(src, dst, size)
 
         def deliver():
             n = self.nodes.get(dst)

@@ -23,6 +23,7 @@ from repro.core.hashing import sample_order
 from repro.core.node import ModestNode
 from repro.core.tasks import AbstractTask, LearningTask
 from repro.data.loader import FederatedData
+from repro.sim.churn import AvailabilityDriver
 from repro.sim.clock import Simulator
 from repro.sim.network import Network
 
@@ -31,6 +32,41 @@ def _speeds(n: int, seed: int, base: float = 0.05, spread: float = 3.0):
     """Heterogeneous per-node seconds-per-batch (stragglers exist)."""
     rng = np.random.default_rng(seed + 1234)
     return base * rng.uniform(1.0, spread, size=n)
+
+
+def _net_and_speeds(sim, n_nodes: int, profile, bandwidth: float, seed: int):
+    """Fabric + per-node speeds: from the TraceProfile when given, else the
+    legacy uniform-random regime with a symmetric bandwidth scalar."""
+    if profile is None:
+        return (Network(sim, n_nodes, bandwidth=bandwidth, seed=seed),
+                _speeds(n_nodes, seed))
+    if n_nodes > profile.n:
+        raise ValueError(f"profile covers {profile.n} nodes, session wants "
+                         f"{n_nodes}")
+    return Network.from_profile(sim, profile), np.asarray(profile.speeds, float)
+
+
+def _profile_defaults(profile, n_nodes, task, extra_required=()):
+    """(n_nodes, task) defaulted from the profile; without one, every listed
+    argument is required and the TypeError names the missing ones."""
+    if profile is None:
+        needed = {"n_nodes": n_nodes, "task": task, **dict(extra_required)}
+        missing = [k for k, v in needed.items() if v is None]
+        if missing:
+            raise TypeError("without profile=, required: "
+                            + ", ".join(missing))
+        return n_nodes, task
+    return (n_nodes or profile.n,
+            task or AbstractTask(model_bytes_=346_000))
+
+
+def _churn_setup(sim, profile, enabled: bool, ids, on_offline, on_online):
+    """(driver, initially-offline ids); (None, empty set) when churn is off."""
+    if profile is None or not enabled:
+        return None, set()
+    driver = AvailabilityDriver(sim, profile, ids,
+                                on_offline=on_offline, on_online=on_online)
+    return driver, set(driver.initially_offline())
 
 
 @dataclass
@@ -42,33 +78,80 @@ class SessionResult:
     overhead_fraction: float = 0.0
     rounds_completed: int = 0
     final_metrics: dict = field(default_factory=dict)
+    churn_events: int = 0             # availability transitions fired
 
     def metric_curve(self, key: str):
         return [(h["t"], h[key]) for h in self.history if key in h]
 
+    def round_intervals(self) -> List[float]:
+        ts = [t for t, _ in self.round_times]
+        return [b - a for a, b in zip(ts, ts[1:])]
+
 
 class ModestSession:
-    """Full MoDeST session (the paper's system)."""
+    """Full MoDeST session (the paper's system).
 
-    def __init__(self, *, n_nodes: int, mcfg: ModestConfig, tcfg: TrainConfig,
-                 task: LearningTask, data: Optional[FederatedData] = None,
+    Heterogeneity comes from either the legacy knobs (``bandwidth`` scalar
+    + uniform-random speeds) or a :class:`~repro.traces.TraceProfile`
+    passed as ``profile=``: per-node speeds, per-link capacity, and —
+    unless ``churn_from_profile=False`` — automatic churn, with nodes
+    crashing when their availability trace goes offline and rejoining via
+    Alg. 2 when it comes back. With a profile, ``n_nodes``/``mcfg``/
+    ``tcfg``/``task`` become optional (sized from the profile).
+    """
+
+    def __init__(self, *, n_nodes: Optional[int] = None,
+                 mcfg: Optional[ModestConfig] = None,
+                 tcfg: Optional[TrainConfig] = None,
+                 task: Optional[LearningTask] = None,
+                 data: Optional[FederatedData] = None,
                  bandwidth: float = 20e6, seed: int = 0,
                  eval_every_rounds: int = 10,
-                 fixed_aggregator: bool = False):
+                 fixed_aggregator: bool = False,
+                 profile=None, churn_from_profile: bool = True):
+        n_nodes, task = _profile_defaults(profile, n_nodes, task,
+                                          extra_required=(("mcfg", mcfg),))
+        # Churny regimes need sf < 1 to keep rounds moving when sampled
+        # trainers drop mid-round (paper Table 2 explores exactly this).
+        mcfg = mcfg or ModestConfig(n_nodes=n_nodes, success_fraction=0.8,
+                                    ping_timeout=1.0)
+        tcfg = tcfg or TrainConfig()
         self.sim = Simulator()
-        self.net = Network(self.sim, n_nodes, bandwidth=bandwidth, seed=seed)
+        self.net, speeds = _net_and_speeds(self.sim, n_nodes, profile,
+                                           bandwidth, seed)
         self.mcfg, self.tcfg, self.task = mcfg, tcfg, task
         self.eval_every = eval_every_rounds
         self.data = data
         self.result = SessionResult()
         self._latest_round_seen = 0
         self._eval_models: Dict[int, object] = {}
+        self.profile = profile
+        self._churn_rng = np.random.default_rng(seed + 5678)
 
         ids = [str(i) for i in range(n_nodes)]
-        speeds = _speeds(n_nodes, seed)
+        offline_now = set()
+        if profile is not None and churn_from_profile:
+            offline_now = {nid for nid in ids
+                           if not profile.timeline(nid).is_online(0.0)}
         fixed_id = None
         if fixed_aggregator:
-            fixed_id = self._best_connected(ids)
+            # The FL server must be online when round 1 bootstraps: prefer
+            # nodes online at t=0, else the earliest-returning ones.
+            cand = [i for i in ids if i not in offline_now]
+            if not cand and profile is not None:
+                first = {i: profile.timeline(i).next_online(0.0) for i in ids}
+                t_min = min(first.values())
+                if math.isfinite(t_min):
+                    cand = [i for i in ids if first[i] == t_min]
+            fixed_id = self._best_connected(cand or ids)
+        # The FL server is infrastructure (§4.3, highly available): exempt
+        # it from trace churn — a synchronous FL baseline with a flickering
+        # server wedges forever, which is not the comparison the paper runs.
+        self.churn_driver, _ = _churn_setup(
+            self.sim, profile, churn_from_profile,
+            [i for i in ids if i != fixed_id],
+            self._trace_offline, self._trace_online)
+        offline_now.discard(fixed_id)
         self.nodes: Dict[str, ModestNode] = {}
         for i, nid in enumerate(ids):
             node = ModestNode(
@@ -79,28 +162,53 @@ class ModestSession:
                 fixed_aggregator=fixed_id)
             node.bootstrap(ids)
             self.nodes[nid] = node
+        for nid in offline_now:
+            self.nodes[nid].online = False
 
-        # Round-1 bootstrap: nodes that find themselves in S^1 self-activate.
+        # Round-1 bootstrap: nodes that find themselves in S^1 self-activate
+        # (only nodes whose trace says they are online at t=0 qualify). When
+        # the whole population is trace-offline at t=0 (e.g. lockstep diurnal
+        # phases), the bootstrap is deferred to the earliest online moment —
+        # rejoin alone advertises membership but never starts a round.
         init = task.init_params(tcfg.seed) if data is not None else None
-        s1 = sample_order(ids, 1)[:mcfg.sample_size]
-        if fixed_id is not None:
+        self._fixed_id = fixed_id
+        if len(offline_now) == len(ids):
+            t_star = min(profile.timeline(nid).next_online(0.0)
+                         for nid in ids)
+            if math.isfinite(t_star):
+                self.sim.schedule(t_star,
+                                  lambda: self._bootstrap_round1(init))
+        else:
+            self._bootstrap_round1(init)
+
+    def _bootstrap_round1(self, init) -> None:
+        ids = list(self.nodes)
+        online = [nid for nid in sample_order(ids, 1)
+                  if (self.profile is None or self.churn_driver is None
+                      or self.profile.timeline(nid).is_online(self.sim.now))]
+        if self._fixed_id is not None:
             # FL emulation: the fixed server aggregates; participants of S^1
             # are chosen by it. Server bootstraps the round by "aggregating"
             # the initial model once.
-            server = self.nodes[fixed_id]
+            server = self.nodes[self._fixed_id]
+            server.recover()
             payload = (M.ModelPayload(params=init) if init is not None
-                       else M.ModelPayload(nbytes=task.model_bytes()))
+                       else M.ModelPayload(nbytes=self.task.model_bytes()))
             server.k_agg = 1
             server._theta_list = [payload]
             server._do_aggregate(1)
         else:
-            for nid in s1:
-                self.nodes[nid].self_activate(1, init)
+            for nid in online[:self.mcfg.sample_size]:
+                node = self.nodes[nid]
+                node.recover()              # deferred case: trace says online
+                node.self_activate(1, init)
 
     # ------------------------------------------------------------------ hooks
 
     def _best_connected(self, ids) -> str:
         """§4.3: the FL server = node with lowest median latency to others."""
+        if len(ids) == 1:
+            return ids[0]
         med = {nid: np.median([self.net.latency(nid, o) for o in ids if o != nid])
                for nid in ids}
         return min(med, key=med.get)
@@ -116,6 +224,25 @@ class ModestSession:
                 self.result.history.append({"t": now, "round": k})
 
     # ------------------------------------------------------------------- churn
+
+    def _trace_offline(self, nid: str) -> None:
+        node = self.nodes.get(nid)
+        if node is not None:
+            node.crash()
+
+    def _trace_online(self, nid: str) -> None:
+        """Trace came back: recover and rejoin through Alg. 2 — the node
+        advertises a Joined event to s random bootstrap peers."""
+        node = self.nodes.get(nid)
+        if node is None or node.online:
+            return
+        node.recover()
+        peers = [j for j in self.nodes if j != nid]
+        if peers:
+            k = min(self.mcfg.sample_size, len(peers))
+            sel = list(self._churn_rng.choice(peers, size=k, replace=False))
+            node.request_join(sel)
+        node._last_active_t = self.sim.now
 
     def schedule_join(self, at: float, node_id: str, *, data_idx: int = 0) -> None:
         def do_join():
@@ -149,7 +276,11 @@ class ModestSession:
     # --------------------------------------------------------------------- run
 
     def run(self, duration: float) -> SessionResult:
+        if self.churn_driver is not None:
+            self.churn_driver.install(duration)
         self.sim.run(until=duration)
+        if self.churn_driver is not None:
+            self.result.churn_events = self.churn_driver.events_fired
         # Evaluate collected models (lazily, once, at the end — evaluation
         # does not consume simulated time, matching §4.2).
         if self.data is not None and self.data.test is not None:
@@ -198,6 +329,8 @@ class _DSGDNode:
         self.sim.schedule(dur, self.finish_train)
 
     def finish_train(self):
+        if not self.online:
+            return                     # crashed mid-train: drop the round
         if self.params is not None:
             self.params = self.session.task.local_train(
                 self.params, self.data,
@@ -233,19 +366,30 @@ class _DSGDNode:
 
 
 class DSGDSession:
-    """D-SGD on a one-peer exponential graph (Ying et al. 2021), as §4.3."""
+    """D-SGD on a one-peer exponential graph (Ying et al. 2021), as §4.3.
 
-    def __init__(self, *, n_nodes: int, tcfg: TrainConfig, task: LearningTask,
+    Accepts ``profile=`` for trace-driven speeds / per-link capacity /
+    availability. Note the synchronous ring has no rejoin protocol: an
+    offline node simply drops messages, so under a churny profile D-SGD
+    wedges — which is the paper's argument for sampling-based DL.
+    """
+
+    def __init__(self, *, n_nodes: Optional[int] = None,
+                 tcfg: Optional[TrainConfig] = None,
+                 task: Optional[LearningTask] = None,
                  data: Optional[FederatedData] = None, bandwidth: float = 20e6,
-                 seed: int = 0, eval_every_rounds: int = 10):
+                 seed: int = 0, eval_every_rounds: int = 10,
+                 profile=None, churn_from_profile: bool = True):
+        n_nodes, task = _profile_defaults(profile, n_nodes, task)
+        tcfg = tcfg or TrainConfig()
         self.sim = Simulator()
-        self.net = Network(self.sim, n_nodes, bandwidth=bandwidth, seed=seed)
+        self.net, speeds = _net_and_speeds(self.sim, n_nodes, profile,
+                                           bandwidth, seed)
         self.tcfg, self.task = tcfg, task
         self.eval_every = eval_every_rounds
         self.data = data
         self.result = SessionResult()
         self._snapshots: Dict[int, list] = {}
-        speeds = _speeds(n_nodes, seed)
         self.nodes: Dict[str, _DSGDNode] = {}
         for i in range(n_nodes):
             node = _DSGDNode(str(i), self,
@@ -254,6 +398,12 @@ class DSGDSession:
             node.params = task.init_params(tcfg.seed) if data is not None else None
             self.net.register(node)
             self.nodes[str(i)] = node
+        self.churn_driver, offline_now = _churn_setup(
+            self.sim, profile, churn_from_profile, list(self.nodes),
+            lambda nid: setattr(self.nodes[nid], "online", False),
+            lambda nid: setattr(self.nodes[nid], "online", True))
+        for nid in offline_now:
+            self.nodes[nid].online = False
 
     def on_round(self, node_id: str, new_round: int, params) -> None:
         if new_round % self.eval_every == 0 and params is not None:
@@ -265,9 +415,14 @@ class DSGDSession:
             self.result.rounds_completed = new_round
 
     def run(self, duration: float) -> SessionResult:
+        if self.churn_driver is not None:
+            self.churn_driver.install(duration)
         for node in self.nodes.values():
-            node.start_round()
+            if node.online:
+                node.start_round()
         self.sim.run(until=duration)
+        if self.churn_driver is not None:
+            self.result.churn_events = self.churn_driver.events_fired
         if self.data is not None and self.data.test is not None:
             for k, snaps in sorted(self._snapshots.items()):
                 metrics = [self.task.evaluate(p, self.data.test) for _, p in snaps]
@@ -305,19 +460,26 @@ class _GossipNode:
         self.online = True
         self.params = None
         self.cycles = 0
+        self.loop_live = False         # a cycle/done event is in flight
 
     def start(self):
         self.sim.schedule(self.period * (0.5 + 0.5 * (int(self.node_id) % 7) / 7),
                           self.cycle)
+        self.loop_live = True
 
     def cycle(self):
         if not self.online:
+            self.loop_live = False     # loop dies; churn driver may resume it
             return
+        self.loop_live = True
         dur = self.session.task.train_time(
             self.data, batch_size=self.session.tcfg.batch_size,
             epochs=1, speed=self.speed)
 
         def done():
+            if not self.online:
+                self.loop_live = False  # went offline mid-train: drop work
+                return
             if self.params is not None:
                 self.params = self.session.task.local_train(
                     self.params, self.data,
@@ -347,21 +509,27 @@ class _GossipNode:
 
 class GossipSession:
     """Gossip Learning: fixed per-node cycle period (the tuning MoDeST's
-    push design removes — §3.6)."""
+    push design removes — §3.6). With ``profile=``, offline nodes pause
+    their cycle and resume it when the trace brings them back."""
 
-    def __init__(self, *, n_nodes: int, tcfg: TrainConfig, task: LearningTask,
+    def __init__(self, *, n_nodes: Optional[int] = None,
+                 tcfg: Optional[TrainConfig] = None,
+                 task: Optional[LearningTask] = None,
                  data: Optional[FederatedData] = None, bandwidth: float = 20e6,
                  seed: int = 0, eval_every_rounds: int = 10,
-                 period: float = 5.0):
+                 period: float = 5.0, profile=None,
+                 churn_from_profile: bool = True):
+        n_nodes, task = _profile_defaults(profile, n_nodes, task)
+        tcfg = tcfg or TrainConfig()
         self.sim = Simulator()
-        self.net = Network(self.sim, n_nodes, bandwidth=bandwidth, seed=seed)
+        self.net, speeds = _net_and_speeds(self.sim, n_nodes, profile,
+                                           bandwidth, seed)
         self.tcfg, self.task = tcfg, task
         self.eval_every = eval_every_rounds
         self.data = data
         self.rng = np.random.default_rng(seed)
         self.result = SessionResult()
         self._snapshots = {}
-        speeds = _speeds(n_nodes, seed)
         self.nodes = {}
         for i in range(n_nodes):
             node = _GossipNode(str(i), self,
@@ -370,6 +538,22 @@ class GossipSession:
             node.params = task.init_params(tcfg.seed) if data is not None else None
             self.net.register(node)
             self.nodes[str(i)] = node
+        self.churn_driver, offline_now = _churn_setup(
+            self.sim, profile, churn_from_profile, list(self.nodes),
+            self._trace_offline, self._trace_online)
+        for nid in offline_now:
+            self.nodes[nid].online = False
+
+    def _trace_offline(self, nid: str) -> None:
+        self.nodes[nid].online = False
+
+    def _trace_online(self, nid: str) -> None:
+        node = self.nodes[nid]
+        if not node.online:
+            node.online = True
+            if not node.loop_live:                 # resume a dead gossip loop
+                node.loop_live = True
+                self.sim.schedule(0.0, node.cycle)
 
     def on_cycle(self, node_id, cycle, params):
         if node_id == "0":
@@ -379,9 +563,14 @@ class GossipSession:
                 self._snapshots[cycle] = (self.sim.now, params)
 
     def run(self, duration: float) -> SessionResult:
+        if self.churn_driver is not None:
+            self.churn_driver.install(duration)
         for node in self.nodes.values():
-            node.start()
+            if node.online:
+                node.start()
         self.sim.run(until=duration)
+        if self.churn_driver is not None:
+            self.result.churn_events = self.churn_driver.events_fired
         if self.data is not None and self.data.test is not None:
             for k, (t, p) in sorted(self._snapshots.items()):
                 m = self.task.evaluate(p, self.data.test)
@@ -397,8 +586,15 @@ class GossipSession:
 
 def fedavg_session(**kw) -> ModestSession:
     """FedAvg emulation exactly as §4.3: a=1, fixed best-connected
-    aggregator, no sampling pings, sf=1."""
-    mcfg: ModestConfig = kw.pop("mcfg")
+    aggregator, no sampling pings, sf=1. Like the session classes,
+    ``mcfg`` may be omitted when a ``profile=`` sizes the population."""
+    mcfg: Optional[ModestConfig] = kw.pop("mcfg", None)
+    if mcfg is None:
+        profile = kw.get("profile")
+        if profile is None:
+            raise TypeError("fedavg_session requires mcfg= or profile=")
+        n = kw.get("n_nodes") or profile.n
+        mcfg = ModestConfig(n_nodes=n, ping_timeout=1.0)
     mcfg = ModestConfig(
         n_nodes=mcfg.n_nodes, sample_size=mcfg.sample_size, n_aggregators=1,
         success_fraction=1.0, ping_timeout=mcfg.ping_timeout,

@@ -1,0 +1,55 @@
+"""Version-compat shims for the jax mesh API.
+
+The launch/distributed code targets the modern explicit-mesh API
+(``jax.make_mesh(..., axis_types=...)`` + ``jax.set_mesh``); the pinned
+toolchain (jax 0.4.x) predates both. These wrappers pick whichever form
+the installed jax provides, with identical semantics for our usage:
+Auto axis types + a mesh installed as the ambient context for jit.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types when supported."""
+    axis_type = getattr(getattr(jax, "sharding", None), "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
+
+
+def jit_shardings(mesh, tree):
+    """Adapt a pytree of ``PartitionSpec``/``None`` for ``jax.jit``.
+
+    Modern jax accepts raw PartitionSpecs under the ambient mesh; 0.4.x
+    requires concrete ``NamedSharding``s, so bind each spec to ``mesh``.
+    ``None`` leaves (unconstrained) pass through either way.
+    """
+    if hasattr(jax, "set_mesh"):
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def bind(s):
+        return NamedSharding(mesh, s) if isinstance(s, PartitionSpec) else s
+
+    return jax.tree.map(
+        bind, tree,
+        is_leaf=lambda s: s is None or isinstance(s, PartitionSpec))
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    Modern jax: ``jax.set_mesh``. 0.4.x: the ``Mesh`` object itself is the
+    context manager (resource-env based), which is equivalent for jit with
+    explicit NamedShardings.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

@@ -1,0 +1,201 @@
+"""Deterministic stand-in for the slice of the ``hypothesis`` API this
+suite uses, activated by ``conftest.py`` only when the real library is
+absent (see ``requirements-dev.txt``).
+
+With real hypothesis installed the property tests get full shrinking and
+example databases; with this fallback each ``@given`` test still runs
+``max_examples`` seeded-random examples (seeded from the test's qualified
+name, so runs are reproducible and failures can be re-run locally).
+
+Supported surface: ``given``, ``settings(max_examples=, deadline=)``,
+``assume``, and ``strategies.{integers, floats, booleans, sampled_from,
+tuples, lists, text, just, data}`` plus ``.map``/``.filter``.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import random
+import string
+import sys
+import types
+
+
+class _Unsatisfied(Exception):
+    """Raised by ``assume(False)``; the example is silently discarded."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_with(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred) -> "SearchStrategy":
+        def draw(rng):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied()
+
+        return SearchStrategy(draw)
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def integers(min_value=None, max_value=None) -> SearchStrategy:
+    lo = -(2**31) if min_value is None else int(min_value)
+    hi = 2**31 if max_value is None else int(max_value)
+    return SearchStrategy(lambda rng: rng.randint(lo, hi))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw) -> SearchStrategy:
+    lo, hi = float(min_value), float(max_value)
+    return SearchStrategy(lambda rng: rng.uniform(lo, hi))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    seq = list(elements)
+    return SearchStrategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def tuples(*strategies) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.example_with(rng) for s in strategies))
+
+
+def lists(elements, *, min_size=0, max_size=10, unique=False,
+          unique_by=None) -> SearchStrategy:
+    key = unique_by or (lambda v: v)
+
+    def draw(rng):
+        size = rng.randint(min_size, max_size if max_size is not None else
+                           min_size + 10)
+        if not (unique or unique_by):
+            return [elements.example_with(rng) for _ in range(size)]
+        out, seen = [], set()
+        # Uniqueness by rejection; bounded so tiny domains can't loop forever.
+        for _ in range(50 * (size + 1)):
+            if len(out) >= size:
+                break
+            v = elements.example_with(rng)
+            k = key(v)
+            if k not in seen:
+                seen.add(k)
+                out.append(v)
+        if len(out) < min_size:
+            raise _Unsatisfied()
+        return out
+
+    return SearchStrategy(draw)
+
+
+def text(alphabet=string.ascii_letters, min_size=0, max_size=10) -> SearchStrategy:
+    chars = list(alphabet)
+
+    def draw(rng):
+        size = rng.randint(min_size, max_size if max_size is not None else
+                           min_size + 10)
+        return "".join(chars[rng.randrange(len(chars))] for _ in range(size))
+
+    return SearchStrategy(draw)
+
+
+class _DataObject:
+    """Interactive draws inside a test body (``st.data()``)."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy, label=None):
+        return strategy.example_with(self._rng)
+
+
+def data() -> SearchStrategy:
+    return SearchStrategy(lambda rng: _DataObject(rng))
+
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class settings:
+    """Decorator form only (``@settings(max_examples=..., deadline=...)``)."""
+
+    def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_max_examples = self.max_examples
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", None) or \
+                getattr(fn, "_fallback_max_examples", None) or \
+                DEFAULT_MAX_EXAMPLES
+            base = int.from_bytes(
+                hashlib.sha256(fn.__qualname__.encode()).digest()[:8], "big")
+            ran = 0
+            for i in range(4 * n):
+                if ran >= n:
+                    break
+                rng = random.Random(base + i)
+                try:
+                    args = [s.example_with(rng) for s in arg_strategies]
+                    kwargs = {k: s.example_with(rng)
+                              for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+                    ran += 1
+                except _Unsatisfied:
+                    continue
+            if ran == 0:
+                raise RuntimeError(
+                    f"{fn.__qualname__}: no examples satisfied "
+                    "assume()/filter() — property never exercised")
+
+        # Present a fixture-free signature to pytest (the strategy-filled
+        # parameters must not be mistaken for fixtures).
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return decorate
+
+
+def install() -> None:
+    """Register ``hypothesis`` + ``hypothesis.strategies`` stub modules."""
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "tuples",
+                 "lists", "text", "just", "data"):
+        setattr(st, name, globals()[name])
+    st.SearchStrategy = SearchStrategy
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = st
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+    hyp.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

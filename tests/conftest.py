@@ -4,3 +4,14 @@ import sys
 # Tests run single-device on CPU (the 512-device forcing is exclusive to
 # launch/dryrun.py, which is its own process).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property-based tests prefer real hypothesis (requirements-dev.txt); when
+# it is unavailable, install a deterministic seeded-example fallback so the
+# suite still exercises the same properties instead of skipping wholesale.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_fallback import install as _install_hypothesis_fallback
+
+    _install_hypothesis_fallback()

@@ -1,0 +1,226 @@
+"""repro.traces: generator determinism, timeline tiling, per-link
+capacity, and the Fig.-6-style churn regression (a churn-heavy profile
+must not wedge a MoDeST session)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.sim.clock import Simulator
+from repro.sim.network import Network
+from repro.sim.runner import ModestSession, fedavg_session
+from repro.traces import (
+    AvailabilityTimeline,
+    TraceProfile,
+    diurnal_availability,
+    diurnal_profile,
+    flash_crowd_profile,
+    fragmented_availability,
+    homogeneous_profile,
+    lognormal_speeds,
+    starved_cohort_profile,
+    zipf_speeds,
+)
+
+# ---------------------------------------------------------------- generators
+
+
+def _assert_profiles_equal(a, b):
+    np.testing.assert_array_equal(a.speeds, b.speeds)
+    np.testing.assert_array_equal(a.uplink, b.uplink)
+    np.testing.assert_array_equal(a.downlink, b.downlink)
+    np.testing.assert_array_equal(a.latency, b.latency)
+    np.testing.assert_array_equal(a.city, b.city)
+    assert a.availability == b.availability
+
+
+@pytest.mark.parametrize("factory", [
+    homogeneous_profile, diurnal_profile, flash_crowd_profile,
+    starved_cohort_profile])
+def test_profiles_deterministic_under_seed(factory):
+    _assert_profiles_equal(factory(24, seed=7), factory(24, seed=7))
+
+
+def test_different_seeds_differ():
+    a, b = diurnal_profile(n=24, seed=1), diurnal_profile(n=24, seed=2)
+    assert not np.array_equal(a.speeds, b.speeds)
+    assert a.availability != b.availability
+
+
+def test_speed_generators_shape_and_positivity():
+    for gen in (lognormal_speeds, zipf_speeds):
+        s = gen(200, seed=3)
+        assert s.shape == (200,) and (s > 0).all()
+    # lognormal is heavy-tailed: p95 well above the median
+    s = lognormal_speeds(2000, seed=4)
+    assert np.percentile(s, 95) > 1.5 * np.median(s)
+
+
+def test_asymmetric_bandwidth_profile():
+    p = diurnal_profile(n=100, seed=0)
+    # uplink strictly below downlink on average (DSL-like asymmetry)
+    assert p.uplink.mean() < p.downlink.mean()
+    # per-link capacity = min(src uplink, dst downlink)
+    assert p.link_capacity("3", "9") == min(p.uplink[3], p.downlink[9])
+
+
+def test_profile_validation():
+    with pytest.raises(ValueError):
+        TraceProfile(name="bad", speeds=np.ones(3), uplink=np.ones(2),
+                     downlink=np.ones(3), latency=np.zeros((2, 2)),
+                     city=np.zeros(3, int),
+                     availability=tuple(AvailabilityTimeline.always_on()
+                                        for _ in range(3)))
+    with pytest.raises(ValueError):
+        AvailabilityTimeline(intervals=((5.0, 3.0),))
+    with pytest.raises(ValueError):
+        AvailabilityTimeline(intervals=((0.0, 2.0), (1.0, 3.0)))
+
+
+# ------------------------------------------------------------------ timelines
+
+
+def test_timeline_tiles_over_long_horizons():
+    tl = AvailabilityTimeline(intervals=((10.0, 40.0), (60.0, 90.0)),
+                              period=100.0)
+    for t in np.linspace(0.0, 99.9, 333):
+        for k in (1, 7, 123):
+            assert tl.is_online(t) == tl.is_online(t + k * 100.0)
+    # 4 transitions per period, exactly tiled over 50 periods
+    trans = list(tl.transitions(0.0, 5000.0))
+    assert len(trans) == 4 * 50
+    # replaying transitions reproduces is_online everywhere
+    state = tl.is_online(0.0)
+    for (t, goes_online) in trans:
+        assert goes_online != state            # every event flips state
+        assert tl.is_online(t) == goes_online  # [start, end) half-open
+        state = goes_online
+
+
+def test_timeline_wrap_merges_boundary_intervals():
+    # online across the period boundary: [0, 20) + [80, 100) fuse — no
+    # off/on flip at k*100
+    tl = AvailabilityTimeline(intervals=((0.0, 20.0), (80.0, 100.0)),
+                              period=100.0)
+    assert tl.is_online(99.9) and tl.is_online(0.0) and tl.is_online(100.0)
+    times = [t for t, _ in tl.transitions(0.0, 1000.0)]
+    assert not any(abs(t % 100.0) < 1e-9 for t in times)
+    assert len(times) == 2 * 10                # one off (20) + one on (80)
+
+
+def test_timeline_aperiodic_and_always_on():
+    on = AvailabilityTimeline.always_on()
+    assert on.is_online(0.0) and on.is_online(1e12)
+    assert list(on.transitions(0.0, 1e9)) == []
+    assert on.online_fraction() == 1.0 and on.is_always_on
+    # semi-infinite arrival: honest fraction needs a horizon
+    late = AvailabilityTimeline(intervals=((75.0, math.inf),))
+    assert not late.is_always_on
+    assert late.online_fraction(horizon=100.0) == pytest.approx(0.25)
+    periodic = AvailabilityTimeline(intervals=((0.0, 30.0),), period=100.0)
+    assert periodic.online_fraction(horizon=250.0) == \
+        pytest.approx((30 + 30 + 30) / 250)      # [200,230) fits in [200,250)
+    assert periodic.online_fraction(horizon=220.0) == \
+        pytest.approx((30 + 30 + 20) / 220)
+    once = AvailabilityTimeline(intervals=((50.0, math.inf),))
+    assert not once.is_online(49.0) and once.is_online(51.0)
+    assert list(once.transitions(0.0, 100.0)) == [(50.0, True)]
+
+
+def test_generated_availability_is_sane():
+    for tls in (diurnal_availability(40, seed=1, period=240.0),
+                fragmented_availability(40, seed=1, period=240.0)):
+        assert len(tls) == 40
+        fracs = [tl.online_fraction() for tl in tls]
+        assert all(0.0 < f <= 1.0 for f in fracs)
+        assert any(f < 1.0 for f in fracs)      # there IS churn
+        # phases differ: not everyone flips at the same instants
+        first_flip = {next(iter(tl.transitions(0.0, 240.0)), (None,))[0]
+                      for tl in tls}
+        assert len(first_flip) > 5
+
+
+# -------------------------------------------------------------------- network
+
+
+def test_network_per_link_capacity():
+    sim = Simulator()
+    up = np.array([1e6, 8e6, 2e6])
+    down = np.array([4e6, 1e6, 16e6])
+    net = Network(sim, 3, uplink=up, downlink=down)
+    assert net.link_capacity("0", "2") == 1e6      # src uplink binds
+    assert net.link_capacity("1", "2") == 8e6      # src uplink binds
+    assert net.link_capacity("2", "1") == 1e6      # dst downlink binds
+    assert net.transfer_time("1", "2", 8_000_000) == pytest.approx(1.0)
+    # scalar fallback unchanged
+    flat = Network(Simulator(), 3, bandwidth=5e6)
+    assert flat.link_capacity("0", "1") == 5e6
+
+
+def test_network_from_profile_matches_profile():
+    p = diurnal_profile(n=12, seed=5)
+    net = Network.from_profile(Simulator(), p)
+    for (i, j) in ((0, 1), (3, 7), (11, 2)):
+        assert net.link_capacity(str(i), str(j)) == \
+            p.link_capacity(str(i), str(j))
+        assert net.latency(str(i), str(j)) == p.pair_latency(str(i), str(j))
+
+
+# ------------------------------------------------------- session integration
+
+
+def test_churn_heavy_session_completes_rounds():
+    """Acceptance: a seeded diurnal profile drives churn automatically and
+    the session still completes >= 20 rounds (Fig. 6 regression)."""
+    session = ModestSession(profile=diurnal_profile(n=64, seed=0))
+    res = session.run(600.0)
+    assert res.rounds_completed >= 20
+    assert res.churn_events > 0                  # churn actually happened
+    assert not any(isinstance(v, float) and math.isnan(v)
+                   for v in res.usage.values() if isinstance(v, float))
+
+
+def test_trace_sessions_are_reproducible():
+    runs = [ModestSession(profile=diurnal_profile(n=32, seed=3)).run(240.0)
+            for _ in range(2)]
+    assert runs[0].rounds_completed == runs[1].rounds_completed
+    assert runs[0].round_times == runs[1].round_times
+    assert runs[0].churn_events == runs[1].churn_events
+
+
+def test_homogeneous_profile_matches_no_churn():
+    s = ModestSession(profile=homogeneous_profile(24, seed=0))
+    res = s.run(120.0)
+    assert res.churn_events == 0
+    assert res.rounds_completed >= 20            # nothing slows it down
+
+
+def test_all_offline_at_t0_bootstraps_later():
+    # lockstep phases (timezone-correlated dropout) can leave every node
+    # offline at t=0; the round-1 bootstrap must defer, not silently no-op
+    p = diurnal_profile(n=8, seed=27, phase_concentration=1.0)
+    assert all(not tl.is_online(0.0) for tl in p.availability), \
+        "precondition: this seed must leave everyone offline at t=0"
+    res = ModestSession(profile=p).run(600.0)
+    assert res.rounds_completed >= 1
+    assert res.churn_events > 0
+
+
+def test_fedavg_server_exempt_from_trace_churn():
+    # §4.3: the FL server is infrastructure; its trace blips must not wedge
+    # the synchronous baseline (regression: used to stall at 1 round)
+    res = fedavg_session(profile=diurnal_profile(n=16, seed=0)).run(600.0)
+    assert res.rounds_completed >= 10
+    assert res.churn_events > 0
+
+
+def test_flash_crowd_bootstrap():
+    # only the core is online at t=0; the crowd arrives and joins via Alg. 2
+    p = flash_crowd_profile(30, seed=0, arrival_at=30.0, arrival_span=20.0)
+    s = ModestSession(profile=p)
+    offline0 = s.churn_driver.initially_offline()
+    assert len(offline0) == 30 - max(1, int(0.15 * 30))
+    res = s.run(200.0)
+    assert res.rounds_completed >= 10
+    assert all(node.online for node in s.nodes.values())  # everyone arrived
