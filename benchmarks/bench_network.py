@@ -2,15 +2,19 @@
 at the paper's published model sizes and node counts (abstract payloads:
 the protocol moves real byte counts without doing the FLOPs).
 
-Also emits the §4.2 heterogeneity comparison: the same MoDeST session on
-the homogeneous control vs the trace-driven diurnal profile (heavy-tailed
-speeds, asymmetric links, availability churn)."""
+Also emits the §4.2 heterogeneity comparison (homogeneous control vs the
+trace-driven diurnal profile) and the flow-contention A/B: the same
+session with the max-min fair-share scheduler on vs the legacy
+full-rate-per-flow semantics, including simulator event throughput so the
+scheduler's overhead is tracked over time (``BENCH_network.json``)."""
 
 from __future__ import annotations
 
+import json
+
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, out_path, timer
 from repro.config import ModestConfig, TrainConfig
 from repro.core.tasks import AbstractTask
 from repro.sim.runner import DSGDSession, ModestSession, fedavg_session
@@ -71,8 +75,24 @@ def run(quick: bool = True):
                                             / max(sub["fedavg"]["total_gb"], 1e-9), 2),
             })
     emit(ratio_rows, "table4_ratios.csv")
-    run_trace_regimes(quick=quick)
+    trace_rows = run_trace_regimes(quick=quick)
+    contention_rows = run_contention(quick=quick)
+    with open(out_path("BENCH_network.json"), "w") as fh:
+        json.dump({"table4": rows, "table4_ratios": ratio_rows,
+                   "trace_regimes": trace_rows,
+                   "contention": contention_rows}, fh, indent=2,
+                  allow_nan=False)
     return rows
+
+
+def _round_stats(res):
+    """(mean, p95) round interval, or Nones when fewer than two rounds
+    completed — NaN would make the JSON artifact unparseable."""
+    iv = res.round_intervals()
+    if not iv:
+        return None, None
+    return (round(float(np.mean(iv)), 3),
+            round(float(np.percentile(iv, 95)), 3))
 
 
 def run_trace_regimes(quick: bool = True):
@@ -86,16 +106,48 @@ def run_trace_regimes(quick: bool = True):
                 ("homogeneous", homogeneous_profile(n, seed=0)),
                 ("diurnal", diurnal_profile(n=n, seed=0))):
             res = ModestSession(profile=profile, task=task).run(duration)
-            iv = res.round_intervals() or [float("nan")]
+            mean_r, p95_r = _round_stats(res)
             rows.append({
                 "table": "trace_regimes", "dataset": name, "regime": regime,
                 "nodes": n, "rounds": res.rounds_completed,
-                "mean_round_s": round(float(np.mean(iv)), 3),
-                "p95_round_s": round(float(np.percentile(iv, 95)), 3),
+                "mean_round_s": mean_r,
+                "p95_round_s": p95_r,
                 "total_gb": round(res.usage["total_bytes"] / 1e9, 3),
                 "churn_events": res.churn_events,
             })
     emit(rows, "trace_regimes.csv")
+    return rows
+
+
+def run_contention(quick: bool = True):
+    """Flow contention on vs off: round-duration fidelity cost and
+    simulator event throughput (the scheduler must stay within ~2× of the
+    fire-and-forget path)."""
+    rows = []
+    n = 40 if quick else 100
+    duration = 300.0 if quick else 900.0
+    task = AbstractTask(model_bytes_=346_000)          # cifar10-size model
+    mcfg = ModestConfig(n_nodes=n, sample_size=8, n_aggregators=2,
+                        success_fraction=1.0, ping_timeout=1.0)
+    for regime, flag in (("contention_off", False), ("contention_on", True)):
+        with timer() as t:
+            sess = ModestSession(n_nodes=n, mcfg=mcfg, tcfg=TrainConfig(),
+                                 task=task, seed=0, contention=flag)
+            res = sess.run(duration)
+        mean_r, p95_r = _round_stats(res)
+        rows.append({
+            "table": "contention", "regime": regime, "nodes": n,
+            "rounds": res.rounds_completed,
+            "mean_round_s": mean_r,
+            "p95_round_s": p95_r,
+            "total_gb": round(res.usage["total_bytes"] / 1e9, 3),
+            "sim_events": sess.sim.events_processed,
+            "reallocations": sess.net.reallocations,
+            "wall_s": round(t.seconds, 3),
+            "events_per_s": int(sess.sim.events_processed
+                                / max(t.seconds, 1e-9)),
+        })
+    emit(rows, "contention.csv")
     return rows
 
 

@@ -111,6 +111,10 @@ class ModestNode:
                           M.Left(sender=self.node_id, node=self.node_id,
                                  counter=self.counter))
         self.online = False
+        # Like crash(): a leaver's in-flight transfers die with it and must
+        # not keep throttling survivors' shared links. (The Left messages
+        # above are sub-min_flow_bytes and unaffected.)
+        self.net.node_offline(self.node_id)
 
     def crash(self) -> None:
         self.online = False
@@ -118,6 +122,9 @@ class ModestNode:
             self._train_handle.cancel()
             self._train_handle = None
             self._train_round_pending = None
+        # The process's sockets died with it: abort in-flight transfers so
+        # the contention scheduler hands their bandwidth back to survivors.
+        self.net.node_offline(self.node_id)
 
     def recover(self) -> None:
         self.online = True

@@ -7,6 +7,13 @@ asynchronous. Completion is continuation-style (the simulator has no
 blocking await): ``sample(k, s, cont)`` calls ``cont(live_nodes)`` once
 ``s`` live nodes replied (or all candidates were exhausted — see note).
 
+A node can legitimately run *two* samples for the same round number at
+once — e.g. as the trainer of round k it samples A^{k+1}, while as an
+aggregator of round k+1 it samples S^{k+1}. Pending state is therefore
+keyed by a unique token per ``sample()`` call, never by round number; a
+Pong for round k (liveness evidence for that round) is routed to every
+sample still waiting on k.
+
 Deviation note: when fewer than ``s`` candidates exist at all (e.g. after
 the Fig. 6 crash of 80 % of nodes with small populations), the paper's
 Alg. 1 retries forever until membership recovers; we additionally resolve
@@ -17,8 +24,9 @@ continue with the 20 surviving nodes).
 
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Set
+from typing import Callable, Dict, List, Set
 
 from repro.core import messages as M
 from repro.core.hashing import sample_order
@@ -26,12 +34,14 @@ from repro.core.hashing import sample_order
 
 @dataclass
 class _PendingSample:
+    token: int
     round_k: int
     size: int
     cont: Callable[[List[str]], None]
     order: List[str]
     replied: List[str] = field(default_factory=list)   # L[k], arrival order
     pinged: Set[str] = field(default_factory=set)
+    handles: List[object] = field(default_factory=list)  # cancellable timers
     next_idx: int = 0
     done: bool = False
     retries: int = 0
@@ -45,15 +55,21 @@ class Sampler:
 
     def __init__(self, node):
         self.node = node                 # needs .node_id .sim .net .candidates(k)
-        self._pending: Dict[int, _PendingSample] = {}
+        self._tokens = itertools.count()
+        self._pending: Dict[int, _PendingSample] = {}        # token -> state
+        self._by_round: Dict[int, List[int]] = {}            # round -> tokens
 
     # -- public ---------------------------------------------------------------
 
-    def sample(self, round_k: int, size: int, cont: Callable[[List[str]], None]) -> None:
+    def sample(self, round_k: int, size: int,
+               cont: Callable[[List[str]], None], *,
+               _retries: int = 0) -> None:
         cands = self.node.candidates(round_k)
         order = sample_order(cands, round_k)
-        st = _PendingSample(round_k, size, cont, order)
-        self._pending[round_k] = st
+        st = _PendingSample(next(self._tokens), round_k, size, cont, order,
+                            retries=_retries)
+        self._pending[st.token] = st
+        self._by_round.setdefault(round_k, []).append(st.token)
         if not order:
             self._retry_later(st)
             return
@@ -61,25 +77,47 @@ class Sampler:
         for j in order[:size]:
             self._ping(st, j)
         st.next_idx = min(size, len(order))
-        self.node.sim.schedule(self.node.timeout, lambda: self._deadline(st))
+        self._after(st, self.node.timeout, lambda: self._deadline(st))
 
     def on_pong(self, round_k: int, j: str) -> None:
-        st = self._pending.get(round_k)
-        if st is None or st.done:
-            return
-        if j not in st.replied:
-            st.replied.append(j)                       # L[k].add(j)
-        if len(st.replied) >= st.size:
-            self._resolve(st)
+        for token in list(self._by_round.get(round_k, ())):
+            st = self._pending.get(token)
+            if st is None or st.done:
+                continue
+            if j not in st.replied:
+                st.replied.append(j)                   # L[k].add(j)
+            if len(st.replied) >= st.size:
+                self._resolve(st)
 
     # -- internals --------------------------------------------------------------
+
+    def _after(self, st: _PendingSample, delay: float,
+               fn: Callable[[], None]) -> None:
+        """Schedule a callback owned by one sample; it is cancelled (not
+        just ignored) once the sample resolves."""
+        st.handles.append(self.node.sim.schedule(delay, fn))
+
+    def _finish(self, st: _PendingSample) -> None:
+        st.done = True
+        for h in st.handles:
+            h.cancel()
+        st.handles.clear()
+        self._pending.pop(st.token, None)
+        tokens = self._by_round.get(st.round_k)
+        if tokens is not None:
+            try:
+                tokens.remove(st.token)
+            except ValueError:
+                pass
+            if not tokens:
+                del self._by_round[st.round_k]
 
     def _ping(self, st: _PendingSample, j: str) -> None:
         st.pinged.add(j)
         if j == self.node.node_id:
             # A node is trivially live to itself; the paper's nodes also
             # ping themselves (loopback), we short-circuit the wire.
-            self.node.sim.schedule(0.0, lambda: self.on_pong(st.round_k, j))
+            self._after(st, 0.0, lambda: self.on_pong(st.round_k, j))
             return
         self.node.net.send(self.node.node_id, j,
                            M.Ping(sender=self.node.node_id, round_k=st.round_k))
@@ -111,28 +149,27 @@ class Sampler:
         j = st.order[st.next_idx]
         st.next_idx += 1
         if j in st.pinged:
-            self.node.sim.schedule(0.0, lambda: self._advance(st))
+            self._after(st, 0.0, lambda: self._advance(st))
             return
         self._ping(st, j)
-        self.node.sim.schedule(self.node.timeout, lambda: self._advance(st))
+        self._after(st, self.node.timeout, lambda: self._advance(st))
 
     def _retry_later(self, st: _PendingSample) -> None:
         st.retries += 1
         if st.retries > self.MAX_RETRIES:
-            st.done = True
-            self._pending.pop(st.round_k, None)
+            self._finish(st)
             st.cont(list(st.replied))                  # best effort
             return
 
         def again():
             if st.done:
                 return
-            self._pending.pop(st.round_k, None)
-            self.sample(st.round_k, st.size, st.cont)
+            self._finish(st)
+            # the fresh state inherits the retry budget already burned
+            self.sample(st.round_k, st.size, st.cont, _retries=st.retries)
 
-        self.node.sim.schedule(self.node.timeout, again)
+        self._after(st, self.node.timeout, again)
 
     def _resolve(self, st: _PendingSample) -> None:
-        st.done = True
-        self._pending.pop(st.round_k, None)
+        self._finish(st)
         st.cont(st.replied[:st.size])                  # L[k].HEAD(s)

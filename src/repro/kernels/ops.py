@@ -45,9 +45,19 @@ def aggregate_pytree(models, weights, *, interpret=None):
     w = jnp.asarray(weights, jnp.float32)
 
     def leaf(*xs):
-        stacked = jnp.stack([jnp.ravel(x) for x in xs])
-        out = aggregate_flat(stacked, w, interpret=interpret)
-        return out.reshape(xs[0].shape).astype(xs[0].dtype)
+        # Integer leaves (optimizer step counters, token counts) must not
+        # be truncated on the way back to int: 6.999999 is 7, not 6. The
+        # kernel emits x.dtype, so ints go through it as fp32 and are
+        # rounded to nearest at the end.
+        dt = jnp.dtype(xs[0].dtype)
+        is_int = jnp.issubdtype(dt, jnp.integer)
+        flat = [jnp.ravel(x).astype(jnp.float32) if is_int else jnp.ravel(x)
+                for x in xs]
+        out = aggregate_flat(jnp.stack(flat), w, interpret=interpret)
+        out = out.reshape(xs[0].shape)
+        if is_int:
+            out = jnp.round(out)
+        return out.astype(dt)
 
     return jax.tree.map(leaf, *models)
 

@@ -23,12 +23,16 @@ class AvailabilityDriver:
 
     def __init__(self, sim, profile, node_ids: Sequence[str], *,
                  on_offline: Callable[[str], None],
-                 on_online: Callable[[str], None]):
+                 on_online: Callable[[str], None],
+                 network=None):
         self.sim = sim
         self.profile = profile
         self.node_ids = list(node_ids)
         self.on_offline = on_offline
         self.on_online = on_online
+        # With a contention-aware fabric, a crash also kills the node's
+        # in-flight transfers, handing their bandwidth back to survivors.
+        self.network = network
         self.events_scheduled = 0
         self.events_fired = 0
 
@@ -50,5 +54,7 @@ class AvailabilityDriver:
         def fire():
             self.events_fired += 1
             (self.on_online if goes_online else self.on_offline)(nid)
+            if not goes_online and self.network is not None:
+                self.network.node_offline(nid)
 
         return fire

@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -38,23 +39,45 @@ class Simulator:
         self._q: list = []
         self._seq = itertools.count()
         self.events_processed = 0
+        self.exhausted = False       # last run() hit max_events
 
     def schedule(self, delay: float, fn: Callable) -> Handle:
         ev = _Event(self.now + max(delay, 0.0), next(self._seq), fn)
         heapq.heappush(self._q, ev)
         return Handle(ev)
 
-    def run(self, until: Optional[float] = None, max_events: int = 50_000_000) -> None:
-        while self._q and self.events_processed < max_events:
+    def run(self, until: Optional[float] = None,
+            max_events: int = 50_000_000) -> None:
+        """Process events up to ``until`` (inclusive) or queue exhaustion.
+
+        ``now`` always lands on ``until`` when given — even if the queue
+        drains early — so later ``schedule(at - sim.now)`` arithmetic stays
+        correct across consecutive ``run`` calls. Hitting ``max_events``
+        sets ``self.exhausted`` and warns: a truncated run is not the same
+        thing as a converged one.
+        """
+        self.exhausted = False
+        budget_start = self.events_processed
+        while self._q:
             if until is not None and self._q[0].time > until:
                 self.now = until
                 return
+            if self.events_processed - budget_start >= max_events:
+                self.exhausted = True
+                warnings.warn(
+                    f"Simulator.run stopped after max_events={max_events} "
+                    f"with {self.pending} events still pending at "
+                    f"t={self.now:.3f} — results are truncated, not "
+                    f"converged", RuntimeWarning, stacklevel=2)
+                return
             ev = heapq.heappop(self._q)
-            self.now = ev.time
             if ev.cancelled:
                 continue
+            self.now = ev.time
             self.events_processed += 1
             ev.fn()
+        if until is not None and self.now < until:
+            self.now = until
 
     @property
     def pending(self) -> int:

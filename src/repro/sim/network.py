@@ -1,15 +1,23 @@
-"""WAN network model: latency matrix + bandwidth + byte accounting.
+"""WAN network model: latency matrix + shared bandwidth + byte accounting.
 
 The paper replays WonderNetwork ping times between 227 cities; offline we
 synthesize an equivalent geo-latency matrix (points on a sphere, great-
 circle propagation delay + jitter) with the same 5–300 ms RTT range, and
 assign nodes to cities round-robin exactly as in §4.2.
+
+Capacity is modeled at flow level (see ``docs/NETWORK.md``): concurrent
+transfers touching the same node *share* its uplink/downlink via max-min
+fair allocation (progressive filling), so an aggregator receiving sf·s
+models simultaneously no longer enjoys sf·s times its real downlink.
+``contention=False`` restores the legacy per-flow ``min(uplink, downlink)``
+semantics for A/B comparison.
 """
 
 from __future__ import annotations
 
+import math
 from collections import defaultdict
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Set
 
 import numpy as np
 
@@ -31,21 +39,54 @@ def wan_latency_matrix(n_cities: int = 227, seed: int = 7) -> np.ndarray:
     return lat.astype(np.float64)
 
 
+class _Flow:
+    """One in-flight transfer: bytes remaining and its current fair rate."""
+
+    __slots__ = ("src", "dst", "remaining", "rate", "deliver", "handle",
+                 "t_last")
+
+    def __init__(self, src: str, dst: str, nbytes: float,
+                 deliver: Callable[[], None], now: float):
+        self.src = src
+        self.dst = dst
+        self.remaining = float(nbytes)
+        self.rate = 0.0
+        self.deliver = deliver
+        self.handle = None          # cancellable completion event
+        self.t_last = now           # sim time `remaining` was last drained to
+
+
 class Network:
     """Message fabric with latency + capacity delays and byte accounting.
 
-    Capacity is per-link: a flow src→dst runs at
-    ``min(uplink[src], downlink[dst])``. The legacy single ``bandwidth``
-    scalar remains the symmetric default when no per-node arrays (or
-    :class:`~repro.traces.profile.TraceProfile`) are supplied.
+    With ``contention=True`` (the default) every transfer of at least
+    ``min_flow_bytes`` becomes a :class:`_Flow`; on each flow start/finish
+    (and on :meth:`set_node_capacity`, :meth:`node_offline`) the max-min
+    fair rates of the affected flows are recomputed and their completion
+    events rescheduled. Reallocation walks only the connected component of
+    the flow graph that touches the changed node — max-min allocations
+    decompose over components, so this is exact yet stays O(flows near the
+    change) for the star-shaped traffic the protocol generates.
+
+    Control messages below ``min_flow_bytes`` (pings, pongs, membership
+    events) keep the closed-form delay: their transfer time at WAN rates is
+    microseconds, and routing them through the scheduler would only burn
+    simulator events without moving any completion time measurably.
+
+    ``contention=False`` restores the legacy semantics where every flow
+    gets the full ``min(uplink[src], downlink[dst])`` regardless of
+    concurrency.
     """
 
     def __init__(self, sim, n_nodes: int, *, latency: Optional[np.ndarray] = None,
                  bandwidth: float = 20e6, uplink: Optional[np.ndarray] = None,
                  downlink: Optional[np.ndarray] = None,
-                 city: Optional[np.ndarray] = None, seed: int = 0):
+                 city: Optional[np.ndarray] = None, seed: int = 0,
+                 contention: bool = True, min_flow_bytes: int = 4096):
         self.sim = sim
-        self.bandwidth = bandwidth   # bytes/s per flow (paper: WAN uplink)
+        self.bandwidth = bandwidth   # bytes/s (paper: WAN uplink)
+        self.contention = contention
+        self.min_flow_bytes = min_flow_bytes
         self._uplink = None if uplink is None else np.asarray(uplink, float)
         self._downlink = (None if downlink is None
                           else np.asarray(downlink, float))
@@ -55,6 +96,13 @@ class Network:
         self._lat = lat
         self._city = cities
         self.nodes: Dict[str, object] = {}
+        # flow scheduler state
+        self._out: Dict[str, Set[_Flow]] = defaultdict(set)
+        self._in: Dict[str, Set[_Flow]] = defaultdict(set)
+        self._cap_override: Dict[str, tuple] = {}    # nid -> (up, down)
+        self.flows_completed = 0
+        self.flows_aborted = 0
+        self.reallocations = 0
         # accounting
         self.bytes_out = defaultdict(int)
         self.bytes_in = defaultdict(int)
@@ -64,13 +112,15 @@ class Network:
     _profile = None     # set by from_profile: the single source of truth
 
     @classmethod
-    def from_profile(cls, sim, profile) -> "Network":
+    def from_profile(cls, sim, profile, *, contention: bool = True,
+                     min_flow_bytes: int = 4096) -> "Network":
         """Build the fabric from a TraceProfile; latency and capacity
         queries delegate to the profile so the semantics live in one
         place (the raw-array constructor path remains for ad-hoc use)."""
         net = cls(sim, profile.n, latency=profile.latency,
                   uplink=profile.uplink, downlink=profile.downlink,
-                  city=profile.city, seed=profile.seed)
+                  city=profile.city, seed=profile.seed,
+                  contention=contention, min_flow_bytes=min_flow_bytes)
         net._profile = profile
         return net
 
@@ -84,26 +134,62 @@ class Network:
         j = self._city[int(dst) % len(self._city)]
         return float(self._lat[i, j])
 
-    def link_capacity(self, src: str, dst: str) -> float:
-        """Bytes/s available to one src→dst flow.
+    # ---- capacity queries -------------------------------------------------
 
-        Per-node arrays fully replace the scalar: supplying either array
-        switches to per-link mode, where each missing direction is simply
-        unconstrained (the scalar must not silently cap profile links).
-        """
+    def node_uplink(self, nid: str) -> float:
+        """Total upstream bytes/s of one node (shared by its outgoing flows)."""
+        ov = self._cap_override.get(nid)
+        if ov is not None and ov[0] is not None:
+            return ov[0]
         if self._profile is not None:
-            return self._profile.link_capacity(src, dst)
-        if self._uplink is None and self._downlink is None:
-            return self.bandwidth
-        cap = float("inf")
+            return self._profile.node_uplink(nid)
         if self._uplink is not None:
-            cap = float(self._uplink[int(src) % len(self._uplink)])
+            return float(self._uplink[int(nid) % len(self._uplink)])
         if self._downlink is not None:
-            cap = min(cap, float(self._downlink[int(dst) % len(self._downlink)]))
-        return cap
+            return float("inf")     # per-link mode: missing direction is free
+        return self.bandwidth       # scalar mode: symmetric last-mile cap
+
+    def node_downlink(self, nid: str) -> float:
+        ov = self._cap_override.get(nid)
+        if ov is not None and ov[1] is not None:
+            return ov[1]
+        if self._profile is not None:
+            return self._profile.node_downlink(nid)
+        if self._downlink is not None:
+            return float(self._downlink[int(nid) % len(self._downlink)])
+        if self._uplink is not None:
+            return float("inf")
+        return self.bandwidth
+
+    def link_capacity(self, src: str, dst: str) -> float:
+        """Bytes/s available to one *uncontended* src→dst flow."""
+        return min(self.node_uplink(src), self.node_downlink(dst))
 
     def transfer_time(self, src: str, dst: str, nbytes: int) -> float:
+        """Uncontended transfer estimate (legacy formula; also the lower
+        bound the fair-share scheduler converges to for a lone flow)."""
         return nbytes / self.link_capacity(src, dst)
+
+    def set_node_capacity(self, nid: str, *, uplink: Optional[float] = None,
+                          downlink: Optional[float] = None) -> None:
+        """Trace-driven capacity change: override a node's last-mile caps
+        from now on and refit every in-flight flow touching it. Pass None
+        to leave a direction untouched (a previous override persists);
+        use :meth:`clear_node_capacity` to drop back to the
+        profile/array value."""
+        old = self._cap_override.get(nid, (None, None))
+        self._cap_override[nid] = (uplink if uplink is not None else old[0],
+                                   downlink if downlink is not None else old[1])
+        if self.contention:
+            self._reallocate((nid,))
+
+    def clear_node_capacity(self, nid: str) -> None:
+        """Remove any :meth:`set_node_capacity` override, reverting the
+        node to its profile/array capacity, and refit in-flight flows."""
+        if self._cap_override.pop(nid, None) is not None and self.contention:
+            self._reallocate((nid,))
+
+    # ---- sending ----------------------------------------------------------
 
     def send(self, src: str, dst: str, msg) -> None:
         size = msg.size_bytes()
@@ -113,7 +199,6 @@ class Network:
         node = self.nodes.get(dst)
         if node is None:
             return
-        delay = self.latency(src, dst) + self.transfer_time(src, dst, size)
 
         def deliver():
             n = self.nodes.get(dst)
@@ -122,7 +207,152 @@ class Network:
             self.bytes_in[dst] += size
             n.receive(msg)
 
-        self.sim.schedule(delay, deliver)
+        lat = self.latency(src, dst)
+        if self.contention and src == dst:
+            # Loopback (a node sampled into its own S^k hands the model to
+            # itself): never traverses the last mile, so it must not steal
+            # max-min share from the node's genuine WAN fan-in/fan-out.
+            self.sim.schedule(lat, deliver)
+            return
+        if not self.contention or size < self.min_flow_bytes:
+            self.sim.schedule(lat + self.transfer_time(src, dst, size),
+                              deliver)
+            return
+        # Propagation delay first, then the payload occupies the links.
+        self.sim.schedule(lat, lambda: self._start_flow(src, dst, size,
+                                                        deliver))
+
+    # ---- flow scheduler ---------------------------------------------------
+
+    def _start_flow(self, src, dst, nbytes, deliver) -> None:
+        # A transfer can't start against a dead endpoint (connection
+        # refused / sender process gone). Without this check, payloads
+        # launched into a crash window would become ghost flows that
+        # throttle survivors' shared links for their full duration —
+        # the legacy formula never charged these doomed sends anywhere.
+        for nid in (src, dst):
+            n = self.nodes.get(nid)
+            if n is not None and not n.online:
+                self.flows_aborted += 1
+                return
+        f = _Flow(src, dst, nbytes, deliver, self.sim.now)
+        self._out[src].add(f)
+        self._in[dst].add(f)
+        self._reallocate((src, dst))
+
+    def _remove_flow(self, f: _Flow) -> None:
+        self._out[f.src].discard(f)
+        self._in[f.dst].discard(f)
+        if f.handle is not None:
+            f.handle.cancel()
+            f.handle = None
+
+    def _complete(self, f: _Flow) -> None:
+        f.handle = None
+        self._remove_flow(f)
+        self.flows_completed += 1
+        f.deliver()
+        self._reallocate((f.src, f.dst))
+
+    def node_offline(self, nid: str) -> None:
+        """A node crashed: its in-flight transfers (both directions) die
+        with it and their capacity is immediately handed back to survivors.
+        Idempotent; a no-op under ``contention=False`` where the legacy
+        drop-at-delivery rule already applies."""
+        if not self.contention:
+            return
+        doomed = list(self._out.get(nid, ())) + list(self._in.get(nid, ()))
+        for f in doomed:
+            self._remove_flow(f)
+            self.flows_aborted += 1
+        if doomed:
+            self._reallocate({nid} | {f.src for f in doomed}
+                             | {f.dst for f in doomed})
+
+    def _component(self, seeds):
+        """Flows in the connected component(s) of the flow graph touching
+        ``seeds`` (nodes). Max-min rates outside the component are
+        unaffected by any change inside it."""
+        nodes, flows, stack = set(), set(), list(seeds)
+        while stack:
+            nid = stack.pop()
+            if nid in nodes:
+                continue
+            nodes.add(nid)
+            touching = list(self._out.get(nid, ())) + list(self._in.get(nid, ()))
+            for f in touching:
+                if f not in flows:
+                    flows.add(f)
+                    if f.src not in nodes:
+                        stack.append(f.src)
+                    if f.dst not in nodes:
+                        stack.append(f.dst)
+        return flows
+
+    def _reallocate(self, seeds) -> None:
+        """Progressive filling (exact max-min fair share) over the affected
+        component: repeatedly find the most-loaded resource (a node's up or
+        down direction), freeze its flows at the equal share, give leftover
+        capacity back, repeat. Then reschedule every completion event."""
+        flows = self._component(seeds)
+        if not flows:
+            return
+        self.reallocations += 1
+        now = self.sim.now
+        old_rate = {}
+        for f in flows:                       # drain progress at old rates
+            if f.rate > 0.0 and now > f.t_last:
+                f.remaining = max(0.0, f.remaining - f.rate * (now - f.t_last))
+            f.t_last = now
+            old_rate[f] = f.rate
+        # resources: ("u", node) = uplink, ("d", node) = downlink
+        cap: Dict[tuple, float] = {}
+        users: Dict[tuple, Set[_Flow]] = defaultdict(set)
+        for f in flows:
+            up = self.node_uplink(f.src)
+            if math.isfinite(up):
+                cap[("u", f.src)] = up
+                users[("u", f.src)].add(f)
+            down = self.node_downlink(f.dst)
+            if math.isfinite(down):
+                cap[("d", f.dst)] = down
+                users[("d", f.dst)].add(f)
+        unfrozen = set(flows)
+        while unfrozen:
+            shares = [(cap[r] / live, r) for r, fs in users.items()
+                      if (live := len(fs & unfrozen))]
+            if not shares:                    # no finite resource binds
+                for f in unfrozen:
+                    f.rate = math.inf
+                break
+            best = min(s for s, _ in shares)
+            share = max(best, 0.0)
+            # Freeze every resource tied (to fp tolerance) with the
+            # bottleneck in the same pass: exactly-tied symmetric caps
+            # would otherwise leave an ulp-negative residual behind and
+            # strand the residual's flows at rate 0 — a silent hang.
+            for _, r in [p for p in shares
+                         if p[0] <= best + 1e-9 * max(abs(best), 1.0)]:
+                for f in users[r] & unfrozen:
+                    f.rate = share
+                    unfrozen.discard(f)
+                    other = ("d", f.dst) if r[0] == "u" else ("u", f.src)
+                    if other in cap and other != r:
+                        cap[other] = max(0.0, cap[other] - share)
+        for f in flows:
+            if f.rate == old_rate[f] and f.handle is not None:
+                continue       # unchanged rate: the old event is still right
+            if f.handle is not None:
+                f.handle.cancel()
+            eta = (0.0 if not math.isfinite(f.rate)
+                   else f.remaining / f.rate if f.rate > 0.0 else None)
+            f.handle = (None if eta is None
+                        else self.sim.schedule(eta,
+                                               lambda f=f: self._complete(f)))
+
+    @property
+    def active_flows(self) -> int:
+        return sum(len(s) for s in self._out.values())
 
     # ---- Table-4 style summaries -----------------------------------------
 

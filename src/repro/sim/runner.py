@@ -34,16 +34,19 @@ def _speeds(n: int, seed: int, base: float = 0.05, spread: float = 3.0):
     return base * rng.uniform(1.0, spread, size=n)
 
 
-def _net_and_speeds(sim, n_nodes: int, profile, bandwidth: float, seed: int):
+def _net_and_speeds(sim, n_nodes: int, profile, bandwidth: float, seed: int,
+                    contention: bool = True):
     """Fabric + per-node speeds: from the TraceProfile when given, else the
     legacy uniform-random regime with a symmetric bandwidth scalar."""
     if profile is None:
-        return (Network(sim, n_nodes, bandwidth=bandwidth, seed=seed),
+        return (Network(sim, n_nodes, bandwidth=bandwidth, seed=seed,
+                        contention=contention),
                 _speeds(n_nodes, seed))
     if n_nodes > profile.n:
         raise ValueError(f"profile covers {profile.n} nodes, session wants "
                          f"{n_nodes}")
-    return Network.from_profile(sim, profile), np.asarray(profile.speeds, float)
+    return (Network.from_profile(sim, profile, contention=contention),
+            np.asarray(profile.speeds, float))
 
 
 def _profile_defaults(profile, n_nodes, task, extra_required=()):
@@ -60,12 +63,14 @@ def _profile_defaults(profile, n_nodes, task, extra_required=()):
             task or AbstractTask(model_bytes_=346_000))
 
 
-def _churn_setup(sim, profile, enabled: bool, ids, on_offline, on_online):
+def _churn_setup(sim, profile, enabled: bool, ids, on_offline, on_online,
+                 network=None):
     """(driver, initially-offline ids); (None, empty set) when churn is off."""
     if profile is None or not enabled:
         return None, set()
     driver = AvailabilityDriver(sim, profile, ids,
-                                on_offline=on_offline, on_online=on_online)
+                                on_offline=on_offline, on_online=on_online,
+                                network=network)
     return driver, set(driver.initially_offline())
 
 
@@ -108,7 +113,8 @@ class ModestSession:
                  bandwidth: float = 20e6, seed: int = 0,
                  eval_every_rounds: int = 10,
                  fixed_aggregator: bool = False,
-                 profile=None, churn_from_profile: bool = True):
+                 profile=None, churn_from_profile: bool = True,
+                 contention: bool = True):
         n_nodes, task = _profile_defaults(profile, n_nodes, task,
                                           extra_required=(("mcfg", mcfg),))
         # Churny regimes need sf < 1 to keep rounds moving when sampled
@@ -118,7 +124,7 @@ class ModestSession:
         tcfg = tcfg or TrainConfig()
         self.sim = Simulator()
         self.net, speeds = _net_and_speeds(self.sim, n_nodes, profile,
-                                           bandwidth, seed)
+                                           bandwidth, seed, contention)
         self.mcfg, self.tcfg, self.task = mcfg, tcfg, task
         self.eval_every = eval_every_rounds
         self.data = data
@@ -150,7 +156,7 @@ class ModestSession:
         self.churn_driver, _ = _churn_setup(
             self.sim, profile, churn_from_profile,
             [i for i in ids if i != fixed_id],
-            self._trace_offline, self._trace_online)
+            self._trace_offline, self._trace_online, network=self.net)
         offline_now.discard(fixed_id)
         self.nodes: Dict[str, ModestNode] = {}
         for i, nid in enumerate(ids):
@@ -379,12 +385,13 @@ class DSGDSession:
                  task: Optional[LearningTask] = None,
                  data: Optional[FederatedData] = None, bandwidth: float = 20e6,
                  seed: int = 0, eval_every_rounds: int = 10,
-                 profile=None, churn_from_profile: bool = True):
+                 profile=None, churn_from_profile: bool = True,
+                 contention: bool = True):
         n_nodes, task = _profile_defaults(profile, n_nodes, task)
         tcfg = tcfg or TrainConfig()
         self.sim = Simulator()
         self.net, speeds = _net_and_speeds(self.sim, n_nodes, profile,
-                                           bandwidth, seed)
+                                           bandwidth, seed, contention)
         self.tcfg, self.task = tcfg, task
         self.eval_every = eval_every_rounds
         self.data = data
@@ -401,7 +408,8 @@ class DSGDSession:
         self.churn_driver, offline_now = _churn_setup(
             self.sim, profile, churn_from_profile, list(self.nodes),
             lambda nid: setattr(self.nodes[nid], "online", False),
-            lambda nid: setattr(self.nodes[nid], "online", True))
+            lambda nid: setattr(self.nodes[nid], "online", True),
+            network=self.net)
         for nid in offline_now:
             self.nodes[nid].online = False
 
@@ -486,19 +494,30 @@ class _GossipNode:
                     batch_size=self.session.tcfg.batch_size,
                     epochs=1, seed=self.cycles)
             self.cycles += 1
-            n = len(self.session.nodes)
-            dst = str(self.session.rng.integers(0, n))
-            payload = (M.ModelPayload(params=self.params)
-                       if self.params is not None else
-                       M.ModelPayload(nbytes=self.session.task.model_bytes()))
-            msg = M.AggregateMsg(sender=self.node_id, round_k=self.cycles,
-                                 model=payload, view=None)
-            self.net.account_payload(msg.model.size_bytes())
-            self.net.send(self.node_id, dst, msg)
+            dst = self._pick_peer()
+            if dst is not None:
+                payload = (M.ModelPayload(params=self.params)
+                           if self.params is not None else
+                           M.ModelPayload(nbytes=self.session.task.model_bytes()))
+                msg = M.AggregateMsg(sender=self.node_id, round_k=self.cycles,
+                                     model=payload, view=None)
+                self.net.account_payload(msg.model.size_bytes())
+                self.net.send(self.node_id, dst, msg)
             self.session.on_cycle(self.node_id, self.cycles, self.params)
             self.sim.schedule(self.period, self.cycle)
 
         self.sim.schedule(dur, done)
+
+    def _pick_peer(self):
+        """Uniform random peer, *excluding self*: a self-push is a no-op
+        average that still inflated Table-4 byte accounting."""
+        n = len(self.session.nodes)
+        if n <= 1:
+            return None
+        d = int(self.session.rng.integers(0, n - 1))
+        if d >= int(self.node_id):
+            d += 1
+        return str(d)
 
     def receive(self, msg):
         if isinstance(msg, M.AggregateMsg) and msg.model.params is not None:
@@ -518,12 +537,12 @@ class GossipSession:
                  data: Optional[FederatedData] = None, bandwidth: float = 20e6,
                  seed: int = 0, eval_every_rounds: int = 10,
                  period: float = 5.0, profile=None,
-                 churn_from_profile: bool = True):
+                 churn_from_profile: bool = True, contention: bool = True):
         n_nodes, task = _profile_defaults(profile, n_nodes, task)
         tcfg = tcfg or TrainConfig()
         self.sim = Simulator()
         self.net, speeds = _net_and_speeds(self.sim, n_nodes, profile,
-                                           bandwidth, seed)
+                                           bandwidth, seed, contention)
         self.tcfg, self.task = tcfg, task
         self.eval_every = eval_every_rounds
         self.data = data
@@ -540,7 +559,7 @@ class GossipSession:
             self.nodes[str(i)] = node
         self.churn_driver, offline_now = _churn_setup(
             self.sim, profile, churn_from_profile, list(self.nodes),
-            self._trace_offline, self._trace_online)
+            self._trace_offline, self._trace_online, network=self.net)
         for nid in offline_now:
             self.nodes[nid].online = False
 

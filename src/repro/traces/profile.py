@@ -71,10 +71,17 @@ class TraceProfile:
         j = self.city[self.node_index(dst)]
         return float(self.latency[i, j])
 
+    def node_uplink(self, node_id: str) -> float:
+        """Total upstream bytes/s of a node — under flow-level contention
+        this is *shared* by all its concurrent outgoing transfers."""
+        return float(self.uplink[self.node_index(node_id)])
+
+    def node_downlink(self, node_id: str) -> float:
+        return float(self.downlink[self.node_index(node_id)])
+
     def link_capacity(self, src: str, dst: str) -> float:
         """Per-flow bytes/s: the tighter of src uplink and dst downlink."""
-        return float(min(self.uplink[self.node_index(src)],
-                         self.downlink[self.node_index(dst)]))
+        return min(self.node_uplink(src), self.node_downlink(dst))
 
     def timeline(self, node_id: str) -> AvailabilityTimeline:
         return self.availability[self.node_index(node_id)]

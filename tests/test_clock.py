@@ -1,0 +1,86 @@
+"""Simulator clock semantics: until-boundary, early drain, cancellation,
+and max_events surfacing (a truncated run must not look converged)."""
+
+import warnings
+
+import pytest
+
+from repro.sim.clock import Simulator
+
+
+def test_now_advances_to_until_when_queue_drains_early():
+    sim = Simulator()
+    fired = []
+    sim.schedule(1.0, lambda: fired.append(sim.now))
+    sim.run(until=10.0)
+    assert fired == [1.0]
+    assert sim.now == 10.0          # not stuck at the last event time
+
+
+def test_consecutive_runs_keep_at_minus_now_math_correct():
+    """schedule_*(at - sim.now) after an early drain must land at `at`."""
+    sim = Simulator()
+    sim.schedule(1.0, lambda: None)
+    sim.run(until=10.0)
+    fired = []
+    at = 15.0
+    sim.schedule(at - sim.now, lambda: fired.append(sim.now))
+    sim.run(until=20.0)
+    assert fired == [pytest.approx(at)]
+    assert sim.now == 20.0
+
+
+def test_events_beyond_until_stay_queued():
+    sim = Simulator()
+    fired = []
+    sim.schedule(5.0, lambda: fired.append("early"))
+    sim.schedule(50.0, lambda: fired.append("late"))
+    sim.run(until=10.0)
+    assert fired == ["early"] and sim.now == 10.0
+    sim.run(until=100.0)
+    assert fired == ["early", "late"] and sim.now == 100.0
+
+
+def test_empty_run_with_until_sets_now():
+    sim = Simulator()
+    sim.run(until=7.5)
+    assert sim.now == 7.5
+
+
+def test_cancelled_events_do_not_fire_or_count():
+    sim = Simulator()
+    fired = []
+    h = sim.schedule(1.0, lambda: fired.append(1))
+    h.cancel()
+    sim.run(until=5.0)
+    assert fired == [] and sim.events_processed == 0
+
+
+def test_max_events_sets_exhausted_and_warns():
+    sim = Simulator()
+
+    def tick():
+        sim.schedule(1.0, tick)       # unbounded self-perpetuating load
+
+    sim.schedule(0.0, tick)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        sim.run(until=1e9, max_events=25)
+    assert sim.exhausted
+    assert sim.events_processed == 25
+    assert any("max_events" in str(w.message) for w in caught)
+    # a normal run afterwards clears the flag
+    sim.run(until=sim.now + 3.0)
+    assert not sim.exhausted
+
+
+def test_max_events_budget_is_per_run():
+    sim = Simulator()
+    for i in range(10):
+        sim.schedule(float(i), lambda: None)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        sim.run(until=100.0, max_events=4)
+    assert sim.exhausted and sim.events_processed == 4
+    sim.run(until=100.0, max_events=100)   # the rest fits comfortably
+    assert not sim.exhausted and sim.events_processed == 10

@@ -54,6 +54,31 @@ def test_aggregate_pytree_property(P, leaves, seed):
                                    rtol=1e-4, atol=1e-5)
 
 
+def test_aggregate_pytree_integer_leaves_round_not_truncate():
+    """fp32 weighted mean of [7, 8] is 7.5: an int32 leaf must round to 8;
+    the old `.astype(int32)` cast silently truncated to 7."""
+    models = [{"step": jnp.asarray([7, 100], jnp.int32),
+               "w": jnp.ones((TILE,))},
+              {"step": jnp.asarray([8, 101], jnp.int32),
+               "w": jnp.zeros((TILE,))}]
+    got = aggregate_pytree(models, [1.0, 1.0])
+    assert got["step"].dtype == jnp.int32
+    assert got["step"].tolist() == [8, 100]        # round-half-even, not floor
+    np.testing.assert_allclose(np.asarray(got["w"]), 0.5)
+
+
+def test_aggregate_pytree_equal_integer_leaves_stay_put():
+    """Optimizer step counters identical across replicas must survive
+    aggregation exactly, whatever fp error the mean introduces."""
+    w = np.abs(np.random.default_rng(0).normal(size=5)) + 0.05
+    models = [{"step": jnp.asarray(7, jnp.int32),
+               "k": jnp.full((3,), 12345, jnp.int32)} for _ in range(5)]
+    got = aggregate_pytree(models, w)
+    assert int(got["step"]) == 7
+    assert got["k"].tolist() == [12345] * 3
+    assert got["k"].dtype == jnp.int32
+
+
 @pytest.mark.parametrize("N", [100, TILE, 2 * TILE + 3])
 @pytest.mark.parametrize("scale", [1e-4, 1.0, 100.0])
 def test_quantize_roundtrip_bound(N, scale):

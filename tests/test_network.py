@@ -1,0 +1,267 @@
+"""Flow-level bandwidth contention: max-min fair sharing, reallocation,
+offline aborts, and the legacy ``contention=False`` escape hatch.
+
+All scenarios use a zero-latency matrix so delivery times are pure
+transfer times and can be checked against closed-form answers.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import messages as M
+from repro.sim.clock import Simulator
+from repro.sim.network import Network
+
+MB = 1_000_000
+
+
+class _Sink:
+    """Minimal network endpoint that logs delivery times."""
+
+    def __init__(self, nid, net, log):
+        self.node_id = nid
+        self.online = True
+        self.net = net
+        self.log = log
+        net.register(self)
+
+    def receive(self, msg):
+        self.log.append((self.net.sim.now, msg.sender))
+
+
+def _msg(src, nbytes):
+    # subtract framing so the payload-on-the-wire is exactly nbytes
+    return M.AggregateMsg(sender=src, round_k=1,
+                          model=M.ModelPayload(nbytes=nbytes - 24), view=None)
+
+
+def _fabric(n, **kw):
+    sim = Simulator()
+    kw.setdefault("latency", np.zeros((n, n)))
+    net = Network(sim, n, **kw)
+    log = []
+    sinks = [_Sink(str(i), net, log) for i in range(n)]
+    return sim, net, log, sinks
+
+
+# --------------------------------------------------------------------- fan-in
+
+
+def test_fanin_eight_flows_share_one_downlink():
+    """The ISSUE's acceptance case: P concurrent equal-size flows into one
+    20 MB/s downlink complete in ≈ P× the single-flow time (±10%)."""
+    sim, net, log, _ = _fabric(9, bandwidth=20 * MB)
+    single = net.transfer_time("1", "0", 20 * MB)
+    assert single == pytest.approx(1.0)
+    for i in range(1, 9):
+        net.send(str(i), "0", _msg(str(i), 20 * MB))
+    sim.run(until=60.0)
+    assert len(log) == 8
+    for t, _src in log:
+        assert t == pytest.approx(8 * single, rel=0.10)
+
+
+def test_single_flow_unaffected_by_contention_flag():
+    for flag in (True, False):
+        sim, net, log, _ = _fabric(2, bandwidth=20 * MB, contention=flag)
+        net.send("0", "1", _msg("0", 40 * MB))
+        sim.run(until=60.0)
+        assert log[0][0] == pytest.approx(2.0, rel=1e-6)
+
+
+def test_contention_off_keeps_legacy_full_rate_per_flow():
+    sim, net, log, _ = _fabric(9, bandwidth=20 * MB, contention=False)
+    for i in range(1, 9):
+        net.send(str(i), "0", _msg(str(i), 20 * MB))
+    sim.run(until=60.0)
+    assert len(log) == 8
+    for t, _src in log:
+        assert t == pytest.approx(1.0, rel=1e-6)   # 8× the real downlink
+
+
+# ------------------------------------------------------------------- fairness
+
+
+def test_maxmin_redistributes_leftover_capacity():
+    """Unequal uplinks into one downlink: the slow sender is capped by its
+    uplink and the fast one inherits *all* the leftover downlink (max-min),
+    not just an equal split."""
+    sim, net, log, _ = _fabric(
+        3, uplink=np.array([5 * MB, 50 * MB, 50 * MB]),
+        downlink=np.array([20 * MB] * 3))
+    net.send("0", "2", _msg("0", 20 * MB))
+    net.send("1", "2", _msg("1", 20 * MB))
+    sim.run(until=60.0)
+    done = {src: t for t, src in log}
+    assert done["1"] == pytest.approx(20 / 15, rel=1e-6)   # 20MB at 15 MB/s
+    assert done["0"] == pytest.approx(4.0, rel=1e-6)       # 20MB at 5 MB/s
+
+
+def test_uplink_shared_across_destinations():
+    """Fan-out shares the sender's uplink just like fan-in shares the
+    receiver's downlink (an aggregator pushing to s trainers)."""
+    sim, net, log, _ = _fabric(5, bandwidth=20 * MB)
+    for i in range(1, 5):
+        net.send("0", str(i), _msg("0", 10 * MB))
+    sim.run(until=60.0)
+    assert len(log) == 4
+    for t, _src in log:
+        assert t == pytest.approx(2.0, rel=1e-6)   # 4 × 10MB over 20 MB/s
+
+
+# ------------------------------------------------------- rate reallocation
+
+
+def test_rates_rise_when_a_flow_finishes():
+    """A 60 MB flow alone (20 MB/s), joined at t=1 by a 20 MB flow: rates
+    drop to 10/10; when the short flow drains at t=3 the long one gets the
+    downlink back and finishes at t=4 (vs 3 uncontended, 5 if rates never
+    rose again)."""
+    sim, net, log, _ = _fabric(3, uplink=np.array([100 * MB] * 3),
+                               downlink=np.array([20 * MB] * 3))
+    net.send("0", "2", _msg("0", 60 * MB))
+    sim.schedule(1.0, lambda: net.send("1", "2", _msg("1", 20 * MB)))
+    sim.run(until=60.0)
+    done = {src: t for t, src in log}
+    assert done["1"] == pytest.approx(3.0, rel=1e-6)
+    assert done["0"] == pytest.approx(4.0, rel=1e-6)
+
+
+def test_offline_node_aborts_flows_and_frees_bandwidth():
+    sim, net, log, sinks = _fabric(3, uplink=np.array([100 * MB] * 3),
+                                   downlink=np.array([20 * MB] * 3))
+    net.send("0", "2", _msg("0", 20 * MB))
+    net.send("1", "2", _msg("1", 20 * MB))
+
+    def kill():
+        sinks[1].online = False
+        net.node_offline("1")
+
+    sim.schedule(0.5, kill)
+    sim.run(until=60.0)
+    # 0.5 s at 10 MB/s (5 MB), then 15 MB at the full 20 MB/s
+    assert {src for _, src in log} == {"0"}
+    assert log[0][0] == pytest.approx(1.25, rel=1e-6)
+    assert net.flows_aborted == 1
+
+
+def test_set_node_capacity_refits_inflight_flows():
+    """Trace-driven capacity change mid-transfer reshapes the rate."""
+    sim, net, log, _ = _fabric(2, bandwidth=20 * MB)
+    net.send("0", "1", _msg("0", 40 * MB))
+    sim.schedule(1.0, lambda: net.set_node_capacity("1", downlink=5 * MB))
+    sim.run(until=60.0)
+    # 20 MB in the first second, remaining 20 MB at 5 MB/s -> t = 5.0
+    assert log[0][0] == pytest.approx(5.0, rel=1e-6)
+    assert net.link_capacity("0", "1") == 5 * MB
+
+
+def test_loopback_send_spawns_no_flow():
+    """A node sampled into its own S^k hands itself the model over
+    loopback — it must not consume its own WAN uplink/downlink."""
+    sim, net, log, _ = _fabric(2, bandwidth=20 * MB)
+    net.send("0", "1", _msg("0", 20 * MB))     # genuine WAN transfer
+    net.send("0", "0", _msg("0", 20 * MB))     # loopback
+    sim.run(until=60.0)
+    assert len(log) == 2
+    # loopback arrives ~instantly; the WAN flow keeps the full uplink
+    ts = sorted(t for t, _ in log)
+    assert ts[0] == pytest.approx(0.0, abs=1e-6)
+    assert ts[1] == pytest.approx(1.0, rel=1e-6)
+    assert net.flows_completed == 1
+
+
+def test_leave_aborts_inflight_flows():
+    """Graceful leave mid-transfer frees bandwidth like a crash does."""
+    from repro.config import ModestConfig, TrainConfig
+    from repro.core.node import ModestNode
+    from repro.core.tasks import AbstractTask
+
+    sim = Simulator()
+    net = Network(sim, 3, latency=np.zeros((3, 3)), bandwidth=20 * MB)
+    mcfg = ModestConfig(n_nodes=3, sample_size=2, n_aggregators=1,
+                        ping_timeout=1.0)
+    nodes = [ModestNode(str(i), sim, net, mcfg, TrainConfig(),
+                        AbstractTask(model_bytes_=1000)) for i in range(3)]
+    for nd in nodes:
+        nd.bootstrap(["0", "1", "2"])
+    net.send("0", "1", _msg("0", 40 * MB))     # long transfer into node 1
+    sim.schedule(0.5, lambda: nodes[1].request_leave(["0", "2"]))
+    sim.run(until=10.0)
+    assert net.flows_aborted >= 1
+    assert not net._in["1"]                    # nothing still charged to it
+
+
+def test_flow_to_dead_endpoint_never_starts():
+    """A payload launched into a crash window must not become a ghost flow
+    that throttles survivors' shared links (legacy never charged it)."""
+    sim, net, log, sinks = _fabric(3, bandwidth=20 * MB)
+    sinks[1].online = False
+    net.send("0", "1", _msg("0", 20 * MB))     # doomed: receiver is down
+    net.send("0", "2", _msg("0", 20 * MB))     # must get the full uplink
+    sim.run(until=60.0)
+    assert {src for _, src in log} == {"0"} and len(log) == 1
+    assert log[0][0] == pytest.approx(1.0, rel=1e-6)   # uncontended
+    assert net.flows_aborted == 1
+
+
+def test_exact_symmetric_ties_all_frozen_in_one_pass():
+    """Crossing flows with identical caps: every resource is exactly tied;
+    all must freeze at the full rate with no fp residual left behind."""
+    sim, net, log, _ = _fabric(2, bandwidth=20 * MB)
+    net.send("0", "1", _msg("0", 20 * MB))
+    net.send("1", "0", _msg("1", 20 * MB))
+    sim.run(until=60.0)
+    assert len(log) == 2
+    for t, _src in log:
+        assert t == pytest.approx(1.0, rel=1e-6)   # directions independent
+
+
+def test_thirds_share_no_stall():
+    """cap/3 shares are not fp-representable; the tied uplink/downlink
+    pair must still drain every flow (regression for the rate-0 stall)."""
+    sim, net, log, _ = _fabric(2, bandwidth=21 * MB)
+    for _ in range(3):
+        net.send("0", "1", _msg("0", 21 * MB))
+    sim.run(until=60.0)
+    assert len(log) == 3
+    for t, _src in log:
+        assert t == pytest.approx(3.0, rel=1e-6)
+
+
+# ------------------------------------------------------------- small messages
+
+
+def test_control_messages_bypass_flow_scheduler():
+    """Sub-min_flow_bytes traffic (pings/pongs) uses the closed-form delay
+    and spawns no flows."""
+    sim, net, log, _ = _fabric(2, bandwidth=20 * MB)
+    net.send("0", "1", M.Ping(sender="0", round_k=1))
+    sim.run(until=10.0)
+    assert len(log) == 1
+    assert net.flows_completed == 0 and net.reallocations == 0
+
+
+# ------------------------------------------------------------------- sessions
+
+
+def test_session_contention_slows_rounds_not_bytes():
+    """The bugfix headline at session scale: with realistic sharing the
+    same protocol completes fewer rounds per unit time, while per-round
+    byte accounting stays byte-identical in aggregate terms."""
+    from repro.config import ModestConfig, TrainConfig
+    from repro.core.tasks import AbstractTask
+    from repro.sim.runner import ModestSession
+
+    mcfg = ModestConfig(n_nodes=24, sample_size=6, n_aggregators=2,
+                        success_fraction=1.0, ping_timeout=1.0)
+    kw = dict(n_nodes=24, mcfg=mcfg, tcfg=TrainConfig(),
+              task=AbstractTask(model_bytes_=2_000_000), seed=0,
+              bandwidth=2 * MB)
+    r_on = ModestSession(contention=True, **kw).run(120.0)
+    r_off = ModestSession(contention=False, **kw).run(120.0)
+    assert r_on.rounds_completed > 3
+    assert r_on.rounds_completed < r_off.rounds_completed
+    on_iv = r_on.round_intervals()
+    off_iv = r_off.round_intervals()
+    assert np.mean(on_iv) > np.mean(off_iv)

@@ -139,3 +139,24 @@ def test_gossip_baseline_runs():
     u = res.usage
     assert u["min_node_bytes"] > 0
     assert u["max_node_bytes"] < 3 * u["min_node_bytes"]
+
+
+def test_gossip_never_pushes_to_self():
+    """Regression: rng.integers(0, n) could draw the sender itself — a
+    no-op transfer that still inflated Table-4 byte accounting."""
+    from repro.sim.runner import GossipSession
+    s = GossipSession(n_nodes=5, tcfg=TCFG,
+                      task=AbstractTask(model_bytes_=100_000),
+                      period=1.0, seed=3)
+    pushes = []
+    orig_send = s.net.send
+
+    def spy(src, dst, msg):
+        if isinstance(msg, M.AggregateMsg):
+            pushes.append((src, dst))
+        return orig_send(src, dst, msg)
+
+    s.net.send = spy
+    s.run(60.0)
+    assert len(pushes) > 100          # n=5, 1 s period, 60 s — plenty drawn
+    assert all(src != dst for src, dst in pushes)

@@ -1,11 +1,17 @@
-"""Alg. 1 properties: determinism, cross-node consistency, and the
-*mostly-consistent* guarantee under view divergence."""
+"""Alg. 1 properties: determinism, cross-node consistency, the
+*mostly-consistent* guarantee under view divergence, and the live
+``Sampler`` state machine (concurrent same-round samples)."""
 
 import string
 
+import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from repro.core import messages as M
 from repro.core.hashing import sample_order, select_aggregators, select_sample
+from repro.core.sampling import Sampler
+from repro.sim.clock import Simulator
+from repro.sim.network import Network
 
 ids = st.lists(st.text(string.ascii_lowercase + string.digits, min_size=1,
                        max_size=12), min_size=1, max_size=60, unique=True)
@@ -63,3 +69,113 @@ def test_aggregators_prefix_of_sample(candidates, k, a):
     sample = select_sample(candidates, k, s)
     aggs = select_aggregators(candidates, k, a)
     assert aggs == sample[:a]
+
+
+# ---------------------------------------------------------------------------
+# Live Sampler state machine (ping/pong over the simulated fabric)
+# ---------------------------------------------------------------------------
+
+
+class _Peer:
+    """Answers every Ping with a Pong, like a live MoDeST node."""
+
+    def __init__(self, nid, sim, net):
+        self.node_id, self.sim, self.net = nid, sim, net
+        self.online = True
+        net.register(self)
+
+    def receive(self, msg):
+        if isinstance(msg, M.Ping):
+            self.net.send(self.node_id, msg.sender,
+                          M.Pong(sender=self.node_id, round_k=msg.round_k))
+
+
+class _Host(_Peer):
+    """A node that runs the Sampler over a fixed candidate view."""
+
+    def __init__(self, nid, sim, net, all_ids, timeout=1.0):
+        super().__init__(nid, sim, net)
+        self.timeout = timeout
+        self.all_ids = list(all_ids)
+        self.sampler = Sampler(self)
+
+    def candidates(self, round_k):
+        return self.all_ids
+
+    def receive(self, msg):
+        if isinstance(msg, M.Pong):
+            self.sampler.on_pong(msg.round_k, msg.sender)
+        else:
+            super().receive(msg)
+
+
+def _harness(n=8):
+    sim = Simulator()
+    net = Network(sim, n, latency=np.full((n, n), 0.01), contention=False)
+    ids = [str(i) for i in range(n)]
+    host = _Host("0", sim, net, ids)
+    peers = [_Peer(i, sim, net) for i in ids[1:]]
+    return sim, host, ids, peers
+
+
+def test_sampler_resolves_with_s_live_nodes():
+    sim, host, ids, _ = _harness()
+    out = []
+    host.sampler.sample(3, 4, out.append)
+    sim.run(until=30.0)
+    assert len(out) == 1 and len(out[0]) == 4
+    assert set(out[0]) <= set(ids)
+
+
+def test_concurrent_same_round_samples_both_resolve():
+    """Regression: a node that is trainer for round k and aggregator for
+    round k+1 issues two sample(k+1, …) calls. The second must not clobber
+    the first — both continuations fire, each with its own size."""
+    sim, host, ids, _ = _harness()
+    done = {}
+    host.sampler.sample(5, 4, lambda L: done.setdefault("trainer->aggs", L))
+    host.sampler.sample(5, 2, lambda L: done.setdefault("agg->sample", L))
+    sim.run(until=30.0)
+    assert set(done) == {"trainer->aggs", "agg->sample"}
+    assert len(done["trainer->aggs"]) == 4
+    assert len(done["agg->sample"]) == 2
+    for L in done.values():
+        assert len(set(L)) == len(L) and set(L) <= set(ids)
+
+
+def test_concurrent_samples_tracked_independently():
+    """No pong misattribution: each pending sample keeps its own state."""
+    sim, host, ids, _ = _harness()
+    host.sampler.sample(7, 3, lambda L: None)
+    host.sampler.sample(7, 3, lambda L: None)
+    assert len(host.sampler._pending) == 2
+    tokens = list(host.sampler._pending)
+    assert tokens[0] != tokens[1]
+    sim.run(until=30.0)
+    assert not host.sampler._pending      # all state cleaned up
+    assert not host.sampler._by_round
+
+
+def test_resolved_sample_cancels_stale_timers():
+    sim, host, ids, _ = _harness()
+    host.sampler.sample(2, 3, lambda L: None)
+    sim.run(until=30.0)
+    # every deadline/advance/retry the sample scheduled is cancelled or
+    # spent: nothing owned by the sampler is left ticking
+    assert not host.sampler._pending
+    assert sim.pending == 0
+
+
+def test_dead_population_resolves_best_effort():
+    """All candidates offline: after MAX_RETRIES the continuation still
+    fires (best effort) instead of leaking a pending sample forever."""
+    sim, host, ids, peers = _harness()
+    for p in peers:
+        p.online = False
+    out = []
+    host.sampler.sample(4, 4, out.append)
+    sim.run(until=200.0)
+    assert len(out) == 1
+    assert set(out[0]) <= {"0"}           # only the loopback self-pong
+    assert not host.sampler._pending
+
