@@ -1,0 +1,109 @@
+"""Paper-scale simulator benchmark → ``BENCH_scale.json``.
+
+Two sections:
+
+* ``scale`` — MoDeST under the diurnal trace regime at n ∈ {100, 400,
+  1000} (the paper's largest population), reporting wall-clock,
+  simulator events/sec, and the fitted scaling exponent of wall-clock in
+  n (log-log least squares). The acceptance bar is **sub-quadratic**
+  (exponent < 2): before the PR-3 hot-path work, view copies and
+  membership merges made large populations quadratic-ish.
+* ``scenario_matrix`` — the `repro.eval` algorithm × regime matrix at a
+  moderate population, so the three paper metrics (time-to-target,
+  communication volume, training resources) and their MoDeST-relative
+  ratios land in the same artifact.
+
+Run ``python -m benchmarks.bench_scale`` (or ``--quick`` for the CI
+variant: shorter horizons, same populations, same JSON shape).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+import numpy as np
+
+from benchmarks.common import emit, out_path, timer
+from repro.eval import scenario_matrix
+from repro.sim.runner import ModestSession
+from repro.traces import diurnal_profile
+
+SCALE_NODES = (100, 400, 1000)
+
+
+def run_scale(quick: bool = True):
+    """MoDeST diurnal sessions across population sizes."""
+    duration = 120.0 if quick else 600.0
+    rows = []
+    for n in SCALE_NODES:
+        with timer() as t:
+            sess = ModestSession(profile=diurnal_profile(n=n, seed=0),
+                                 contention=True)
+            res = sess.run(duration)
+        rows.append({
+            "table": "scale", "nodes": n, "duration_s": duration,
+            "rounds": res.rounds_completed,
+            "churn_events": res.churn_events,
+            "sim_events": sess.sim.events_processed,
+            "reallocations": sess.net.reallocations,
+            "train_node_s": round(res.train_node_seconds, 1),
+            "wall_s": round(t.seconds, 3),
+            "events_per_s": int(sess.sim.events_processed
+                                / max(t.seconds, 1e-9)),
+        })
+    # log-log slope of wall-clock in n; < 2 = sub-quadratic (the bar)
+    xs = np.log([r["nodes"] for r in rows])
+    ys = np.log([max(r["wall_s"], 1e-3) for r in rows])
+    exponent = float(np.polyfit(xs, ys, 1)[0])
+    emit(rows, "scale.csv")
+    print(f"wall-clock scaling exponent in n: {exponent:.2f} "
+          f"({'sub' if exponent < 2 else 'SUPER'}-quadratic)")
+    return rows, round(exponent, 3)
+
+
+def run_matrix(quick: bool = True):
+    """The repro.eval scenario matrix (all four algos × four regimes)."""
+    out = scenario_matrix(
+        n=40 if quick else 100,
+        seeds=(0,) if quick else (0, 1, 2),
+        duration=200.0 if quick else 600.0,
+        target_round=10 if quick else 30,
+    )
+    emit(out["summary"], "scenario_matrix.csv")
+    return out
+
+
+def _finite(obj):
+    """inf/nan → strings so the artifact stays strict-JSON parseable."""
+    if isinstance(obj, dict):
+        return {k: _finite(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_finite(v) for v in obj]
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return str(obj)
+    return obj
+
+
+def run(quick: bool = True):
+    scale_rows, exponent = run_scale(quick=quick)
+    matrix = run_matrix(quick=quick)
+    artifact = _finite({
+        "quick": quick,
+        "scale": scale_rows,
+        "wall_clock_exponent": exponent,
+        "scenario_matrix": {"summary": matrix["summary"],
+                            "ratios": matrix["ratios"]},
+    })
+    with open(out_path("BENCH_scale.json"), "w") as fh:
+        json.dump(artifact, fh, indent=2, allow_nan=False)
+    print(f"wrote {out_path('BENCH_scale.json')}")
+    return artifact
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI variant: shorter horizons, same populations")
+    run(quick=ap.parse_args().quick)

@@ -16,6 +16,7 @@ from benchmarks.common import emit
 BENCHES = [
     ("fig3_convergence", "benchmarks.bench_convergence"),
     ("table4_network", "benchmarks.bench_network"),
+    ("paper_scale", "benchmarks.bench_scale"),
     ("fig4_sample_params", "benchmarks.bench_sample_params"),
     ("fig5_membership", "benchmarks.bench_membership"),
     ("fig6_crash", "benchmarks.bench_crash"),

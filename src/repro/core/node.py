@@ -60,7 +60,13 @@ class ModestNode:
         self._train_done = set()               # rounds already trained (guard)
         self._train_handle = None              # cancellable pending training
         self._train_round_pending = None
+        self._train_started_at = 0.0
         self.sample_durations: List[tuple] = []   # (t, seconds) for Fig. 6
+        # Training-resource accounting (paper §4.5: resource usage = time
+        # spent training). Completed trainings count in full; cancelled or
+        # crash-interrupted ones count the compute burned up to the cut.
+        self.train_seconds = 0.0
+        self.trainings_completed = 0
 
         # §3.5 auto-rejoin: a node wrongly suspected unresponsive re-joins
         # once it has been inactive for more than Δk · (average round time).
@@ -85,12 +91,22 @@ class ModestNode:
 
     # -------------------------------------------------------------- membership
 
-    def bootstrap(self, all_ids: List[str]) -> None:
+    def bootstrap(self, all_ids: List[str], *, base=None) -> None:
         """Out-of-band initial view (metadata download, §4.1): everyone
-        registered with counter 1, activity 0."""
-        for j in all_ids:
-            self.registry.update(j, 1, JOINED)
-            self.activity.update(j, 0)
+        registered with counter 1, activity 0.
+
+        ``base`` is an optional prebuilt ``(Registry, ActivityTracker)``
+        pair shared by the whole population; it is adopted as a
+        copy-on-write snapshot, making session construction O(n) instead
+        of O(n²) — the dominant startup cost at paper scale (n = 1000).
+        """
+        if base is not None:
+            self.registry = base[0].snapshot()
+            self.activity = base[1].snapshot()
+        else:
+            for j in all_ids:
+                self.registry.update(j, 1, JOINED)
+                self.activity.update(j, 0)
         self.counter = max(self.counter, 1)
 
     def request_join(self, peers: List[str]) -> None:
@@ -111,20 +127,26 @@ class ModestNode:
                           M.Left(sender=self.node_id, node=self.node_id,
                                  counter=self.counter))
         self.online = False
-        # Like crash(): a leaver's in-flight transfers die with it and must
-        # not keep throttling survivors' shared links. (The Left messages
-        # above are sub-min_flow_bytes and unaffected.)
+        # Like crash(): a leaver's in-flight training and transfers die
+        # with it and must not keep throttling survivors' shared links.
+        # (The Left messages above are sub-min_flow_bytes and unaffected.)
+        self._cancel_training()
         self.net.node_offline(self.node_id)
 
     def crash(self) -> None:
         self.online = False
-        if self._train_handle is not None:     # the process died mid-train
-            self._train_handle.cancel()
-            self._train_handle = None
-            self._train_round_pending = None
+        self._cancel_training()                # the process died mid-train
         # The process's sockets died with it: abort in-flight transfers so
         # the contention scheduler hands their bandwidth back to survivors.
         self.net.node_offline(self.node_id)
+
+    def _cancel_training(self) -> None:
+        if self._train_handle is not None:
+            self._train_handle.cancel()
+            self._train_handle = None
+            self._train_round_pending = None
+            # partial compute burned before the interruption still counts
+            self.train_seconds += self.sim.now - self._train_started_at
 
     def recover(self) -> None:
         self.online = True
@@ -258,10 +280,7 @@ class ModestNode:
             return                                         # stale
         if k > self.k_train:
             self.k_train = k
-            if self._train_handle is not None:             # CANCEL(θ̄)
-                self._train_handle.cancel()
-                self._train_handle = None
-                self._train_round_pending = None
+            self._cancel_training()                        # CANCEL(θ̄)
         if self._train_round_pending is not None:
             return                                         # PENDING(θ̄)
 
@@ -269,6 +288,7 @@ class ModestNode:
             self.data, batch_size=self.tcfg.batch_size,
             epochs=self.mcfg.local_steps, speed=self.train_speed)
         self._train_round_pending = k
+        self._train_started_at = self.sim.now
         incoming = msg.model
 
         def finish() -> None:
@@ -276,8 +296,10 @@ class ModestNode:
             self._train_round_pending = None
             if not self.online:                # crashed mid-train: drop work
                 return
+            self.train_seconds += duration
             if k != self.k_train or k in self._train_done:
                 return
+            self.trainings_completed += 1
             self._train_done.add(k)
             if incoming.params is not None:
                 updated = self.task.local_train(

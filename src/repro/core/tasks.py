@@ -41,10 +41,18 @@ class LearningTask:
             weights = [1.0] * len(models)
         return tree_weighted_mean(list(models), np.asarray(weights, np.float32))
 
+    _model_bytes_cache: Optional[int] = None
+
     def model_bytes(self, params=None) -> int:
-        if params is None:
-            params = self.init_params(0)
-        return tree_size_bytes(params)
+        if params is not None:
+            return tree_size_bytes(params)
+        # Byte-only payload paths (crashed-trainer fallbacks, AbstractTask
+        # sessions) call this once per message; materializing a fresh
+        # parameter pytree each time is pure waste when only the wire size
+        # matters, so the size is computed once per task instance.
+        if self._model_bytes_cache is None:
+            self._model_bytes_cache = tree_size_bytes(self.init_params(0))
+        return self._model_bytes_cache
 
     def train_time(self, client: ClientDataset, *, batch_size: int,
                    epochs: int = 1, speed: float = 0.05) -> float:

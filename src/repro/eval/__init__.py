@@ -1,0 +1,27 @@
+"""`repro.eval` — the paper's three headline metrics plus the scenario
+matrix that produces them (docs/EVAL.md).
+
+* :mod:`repro.eval.metrics` — time-to-accuracy@target, communication
+  volume, and training resources (node-seconds of compute) from one
+  finished session, plus paper-style × ratio comparison.
+* :mod:`repro.eval.scenarios` — algorithm × trace-regime × seed matrix
+  runner (MoDeST vs D-SGD vs Gossip vs emulated FedAvg under
+  homogeneous / diurnal / flash-crowd / starved-cohort regimes).
+"""
+
+from repro.eval.metrics import (  # noqa: F401
+    EvalMetrics,
+    communication_volume,
+    compare,
+    evaluate_session,
+    time_to_metric,
+    time_to_round,
+    training_resources,
+)
+from repro.eval.scenarios import (  # noqa: F401
+    DEFAULT_ALGOS,
+    REGIMES,
+    Scenario,
+    run_scenario,
+    scenario_matrix,
+)

@@ -1,0 +1,163 @@
+"""Scenario-matrix runner: algorithm × trace regime × seed, in one call.
+
+The paper's comparisons (Tables 3–4, Figs. 5–6) are a matrix: each
+algorithm (MoDeST, D-SGD, Gossip, emulated FedAvg) under each
+heterogeneity regime, repeated over seeds. This module makes that matrix
+one invocation::
+
+    from repro.eval import scenario_matrix
+
+    out = scenario_matrix(n=100, seeds=(0, 1, 2), duration=300.0)
+    out["summary"]            # per (algo, regime): the three paper metrics
+    out["ratios"]["diurnal"]  # baselines vs MoDeST, paper-style × factors
+
+Sessions run byte-only (:class:`~repro.core.tasks.AbstractTask` at a real
+model size), so the matrix covers paper-scale populations without doing
+FLOPs; time-to-accuracy uses the round-R proxy (see
+:mod:`repro.eval.metrics`). Caveat: a round does different amounts of
+learning per algorithm (MoDeST trains s sampled nodes, D-SGD all n,
+a gossip cycle is one node's counter), so byte-only
+``time_to_target_x`` ratios are comparable *within* an algorithm across
+regimes/populations, not across algorithms — pass
+``task=``/``data=``/``target=`` (a real learning task and accuracy
+target) for the paper's cross-algorithm time-to-accuracy axis; the
+communication and training-resource axes are unit-compatible either
+way (docs/EVAL.md).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.tasks import AbstractTask
+from repro.eval.metrics import EvalMetrics, compare, evaluate_session
+from repro.sim.runner import (DSGDSession, GossipSession, ModestSession,
+                              fedavg_session)
+from repro.traces import (diurnal_profile, flash_crowd_profile,
+                          homogeneous_profile, starved_cohort_profile)
+
+REGIMES = {
+    "homogeneous": homogeneous_profile,
+    "diurnal": diurnal_profile,
+    "flash_crowd": flash_crowd_profile,
+    "starved_cohort": starved_cohort_profile,
+}
+
+_SESSIONS = {
+    "modest": ModestSession,
+    "dsgd": DSGDSession,
+    "gossip": GossipSession,
+    "fedavg": fedavg_session,
+}
+
+DEFAULT_ALGOS = ("modest", "dsgd", "gossip", "fedavg")
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One cell of the matrix."""
+
+    algo: str                         # modest | dsgd | gossip | fedavg
+    regime: str                       # key of REGIMES
+    n: int = 64
+    seed: int = 0
+    duration: float = 300.0
+    model_bytes: int = 346_000        # CIFAR-10 CNN (Table 3)
+    target_round: int = 20            # time-to-accuracy proxy round
+    contention: bool = True
+
+    def profile(self):
+        try:
+            factory = REGIMES[self.regime]
+        except KeyError:
+            raise ValueError(f"unknown regime {self.regime!r}; "
+                             f"one of {sorted(REGIMES)}") from None
+        return factory(self.n, seed=self.seed)
+
+
+def run_scenario(sc: Scenario, *, task=None, data=None,
+                 target: Optional[float] = None,
+                 target_key: str = "accuracy") -> Tuple[object, EvalMetrics]:
+    """Run one cell; returns ``(SessionResult, EvalMetrics)``.
+
+    The session wall-clock and event count ride along in
+    ``EvalMetrics.extras`` so scale benchmarks can reuse the runner.
+    """
+    try:
+        session_cls = _SESSIONS[sc.algo]
+    except KeyError:
+        raise ValueError(f"unknown algo {sc.algo!r}; "
+                         f"one of {sorted(_SESSIONS)}") from None
+    task = task or AbstractTask(model_bytes_=sc.model_bytes)
+    t0 = time.perf_counter()
+    session = session_cls(profile=sc.profile(), task=task, data=data,
+                          seed=sc.seed, contention=sc.contention)
+    result = session.run(sc.duration)
+    wall = time.perf_counter() - t0
+    metrics = evaluate_session(
+        result, algo=sc.algo,
+        target=target, target_key=target_key,
+        target_round=None if target is not None else sc.target_round)
+    metrics.extras.update({
+        "regime": sc.regime, "n": sc.n, "seed": sc.seed,
+        "duration_s": sc.duration,
+        "wall_s": round(wall, 3),
+        "sim_events": session.sim.events_processed,
+        "events_per_s": int(session.sim.events_processed / max(wall, 1e-9)),
+        "churn_events": result.churn_events,
+    })
+    return result, metrics
+
+
+def _mean_or_none(vals):
+    vals = [v for v in vals if v is not None]
+    return round(float(np.mean(vals)), 3) if vals else None
+
+
+def scenario_matrix(*, algos: Sequence[str] = DEFAULT_ALGOS,
+                    regimes: Iterable[str] = tuple(REGIMES),
+                    n: int = 64, seeds: Sequence[int] = (0,),
+                    duration: float = 300.0, model_bytes: int = 346_000,
+                    target_round: int = 20, contention: bool = True,
+                    task=None, data=None, target: Optional[float] = None,
+                    ) -> Dict[str, object]:
+    """Sweep the full matrix; returns ``rows`` (one per cell × seed),
+    ``summary`` (seed-averaged, one per cell) and ``ratios`` (per regime,
+    baselines vs MoDeST)."""
+    rows, summary, ratios = [], [], {}
+    for regime in regimes:
+        per_algo: Dict[str, EvalMetrics] = {}
+        for algo in algos:
+            runs = []
+            for seed in seeds:
+                sc = Scenario(algo=algo, regime=regime, n=n, seed=seed,
+                              duration=duration, model_bytes=model_bytes,
+                              target_round=target_round,
+                              contention=contention)
+                _, m = run_scenario(sc, task=task, data=data, target=target)
+                runs.append(m)
+                rows.append(m.as_row())
+            mean = EvalMetrics(
+                algo=algo,
+                time_to_target_s=_mean_or_none(
+                    [m.time_to_target_s for m in runs]),
+                communication_bytes=int(np.mean(
+                    [m.communication_bytes for m in runs])),
+                train_node_seconds=float(np.mean(
+                    [m.train_node_seconds for m in runs])),
+                rounds_completed=int(np.mean(
+                    [m.rounds_completed for m in runs])),
+                target=runs[0].target,
+                extras={"regime": regime, "n": n, "seeds": len(seeds),
+                        "reached_target": sum(
+                            m.time_to_target_s is not None for m in runs)},
+            )
+            per_algo[algo] = mean
+            summary.append(mean.as_row())
+        if "modest" in per_algo and len(per_algo) > 1:
+            ratios[regime] = compare(per_algo, baseline_of="modest")
+    return {"rows": rows, "summary": summary, "ratios": ratios}

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import math
 from collections import defaultdict
-from typing import Callable, Dict, Optional, Set
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
@@ -64,9 +64,12 @@ class Network:
     (and on :meth:`set_node_capacity`, :meth:`node_offline`) the max-min
     fair rates of the affected flows are recomputed and their completion
     events rescheduled. Reallocation walks only the connected component of
-    the flow graph that touches the changed node — max-min allocations
-    decompose over components, so this is exact yet stays O(flows near the
-    change) for the star-shaped traffic the protocol generates.
+    the flow/resource graph touching the changed *node direction* (uplink
+    and downlink are separate resources) — max-min allocations decompose
+    over these components, so this is exact yet stays O(flows near the
+    change) for the star-shaped traffic the protocol generates, and the
+    direction-aware walk keeps an aggregator's fan-in from dragging its
+    unrelated outgoing traffic into every recompute.
 
     Control messages below ``min_flow_bytes`` (pings, pongs, membership
     events) keep the closed-form delay: their transfer time at WAN rates is
@@ -96,10 +99,13 @@ class Network:
         self._lat = lat
         self._city = cities
         self.nodes: Dict[str, object] = {}
-        # flow scheduler state
-        self._out: Dict[str, Set[_Flow]] = defaultdict(set)
-        self._in: Dict[str, Set[_Flow]] = defaultdict(set)
+        # flow scheduler state — insertion-ordered flow sets (dict keys) so
+        # reallocation order, and with it event tie-breaking, is
+        # deterministic by construction rather than by object-id accident
+        self._out: Dict[str, Dict[_Flow, None]] = defaultdict(dict)
+        self._in: Dict[str, Dict[_Flow, None]] = defaultdict(dict)
         self._cap_override: Dict[str, tuple] = {}    # nid -> (up, down)
+        self._cap_cache: Dict[str, tuple] = {}       # nid -> (up, down)
         self.flows_completed = 0
         self.flows_aborted = 0
         self.reallocations = 0
@@ -134,10 +140,38 @@ class Network:
         j = self._city[int(dst) % len(self._city)]
         return float(self._lat[i, j])
 
+    def latency_matrix(self, ids) -> np.ndarray:
+        """Pairwise one-way latency for ``ids`` as an array — the
+        vectorized form of :meth:`latency` (same node→city mapping), for
+        whole-population computations like FL-server selection."""
+        if self._profile is not None:
+            city = self._profile.city
+            ci = city[[self._profile.node_index(i) for i in ids]]
+            lat = self._profile.latency
+        else:
+            ci = np.asarray([self._city[int(i) % len(self._city)]
+                             for i in ids])
+            lat = self._lat
+        return lat[np.ix_(ci, ci)].astype(np.float64)
+
     # ---- capacity queries -------------------------------------------------
 
     def node_uplink(self, nid: str) -> float:
         """Total upstream bytes/s of one node (shared by its outgoing flows)."""
+        c = self._cap_cache.get(nid)
+        if c is None:
+            c = self._cap_cache[nid] = (self._uplink_of(nid),
+                                        self._downlink_of(nid))
+        return c[0]
+
+    def node_downlink(self, nid: str) -> float:
+        c = self._cap_cache.get(nid)
+        if c is None:
+            c = self._cap_cache[nid] = (self._uplink_of(nid),
+                                        self._downlink_of(nid))
+        return c[1]
+
+    def _uplink_of(self, nid: str) -> float:
         ov = self._cap_override.get(nid)
         if ov is not None and ov[0] is not None:
             return ov[0]
@@ -149,7 +183,7 @@ class Network:
             return float("inf")     # per-link mode: missing direction is free
         return self.bandwidth       # scalar mode: symmetric last-mile cap
 
-    def node_downlink(self, nid: str) -> float:
+    def _downlink_of(self, nid: str) -> float:
         ov = self._cap_override.get(nid)
         if ov is not None and ov[1] is not None:
             return ov[1]
@@ -180,14 +214,17 @@ class Network:
         old = self._cap_override.get(nid, (None, None))
         self._cap_override[nid] = (uplink if uplink is not None else old[0],
                                    downlink if downlink is not None else old[1])
+        self._cap_cache.pop(nid, None)
         if self.contention:
-            self._reallocate((nid,))
+            self._reallocate((("u", nid), ("d", nid)))
 
     def clear_node_capacity(self, nid: str) -> None:
         """Remove any :meth:`set_node_capacity` override, reverting the
         node to its profile/array capacity, and refit in-flight flows."""
-        if self._cap_override.pop(nid, None) is not None and self.contention:
-            self._reallocate((nid,))
+        if self._cap_override.pop(nid, None) is not None:
+            self._cap_cache.pop(nid, None)
+            if self.contention:
+                self._reallocate((("u", nid), ("d", nid)))
 
     # ---- sending ----------------------------------------------------------
 
@@ -236,13 +273,13 @@ class Network:
                 self.flows_aborted += 1
                 return
         f = _Flow(src, dst, nbytes, deliver, self.sim.now)
-        self._out[src].add(f)
-        self._in[dst].add(f)
-        self._reallocate((src, dst))
+        self._out[src][f] = None
+        self._in[dst][f] = None
+        self._reallocate((("u", src), ("d", dst)), seed_flows=(f,))
 
     def _remove_flow(self, f: _Flow) -> None:
-        self._out[f.src].discard(f)
-        self._in[f.dst].discard(f)
+        self._out[f.src].pop(f, None)
+        self._in[f.dst].pop(f, None)
         if f.handle is not None:
             f.handle.cancel()
             f.handle = None
@@ -252,7 +289,7 @@ class Network:
         self._remove_flow(f)
         self.flows_completed += 1
         f.deliver()
-        self._reallocate((f.src, f.dst))
+        self._reallocate((("u", f.src), ("d", f.dst)))
 
     def node_offline(self, nid: str) -> None:
         """A node crashed: its in-flight transfers (both directions) die
@@ -262,65 +299,102 @@ class Network:
         if not self.contention:
             return
         doomed = list(self._out.get(nid, ())) + list(self._in.get(nid, ()))
+        if not doomed:
+            return
+        seeds = []
         for f in doomed:
             self._remove_flow(f)
             self.flows_aborted += 1
-        if doomed:
-            self._reallocate({nid} | {f.src for f in doomed}
-                             | {f.dst for f in doomed})
+            seeds.extend((("u", f.src), ("d", f.dst)))
+        self._reallocate(seeds)
 
-    def _component(self, seeds):
-        """Flows in the connected component(s) of the flow graph touching
-        ``seeds`` (nodes). Max-min rates outside the component are
-        unaffected by any change inside it."""
-        nodes, flows, stack = set(), set(), list(seeds)
+    def _component(self, seed_resources, seed_flows=()):
+        """Flows coupled (directly or transitively) to the seeds, walking
+        the bipartite flow/resource graph where a resource is one *node
+        direction* — ("u", nid) uplink or ("d", nid) downlink. Max-min
+        allocations decompose over these components, and the direction-
+        aware walk is strictly tighter than a node-level walk: an
+        aggregator's fan-in no longer drags its unrelated outgoing flows
+        (and everything transitively behind them) into every reallocation.
+        Resources with infinite capacity never bind, hence never couple —
+        they are not expanded (seed resources always are: a capacity
+        override may have just *become* infinite and its flows still need
+        refitting). ``seed_flows`` are included unconditionally (a newly
+        started flow must get a rate even if nothing constrains it)."""
+        flows: Dict[_Flow, None] = {}
+        stack: list = []
+        seen = set()
+
+        def add_flow(f: _Flow) -> None:
+            if f not in flows:
+                flows[f] = None
+                for r in (("u", f.src), ("d", f.dst)):
+                    if r not in seen:
+                        stack.append(r)
+
+        for f in seed_flows:
+            add_flow(f)
+        for r in seed_resources:
+            if r not in seen:
+                seen.add(r)
+                side = self._out if r[0] == "u" else self._in
+                for f in side.get(r[1], ()):
+                    add_flow(f)
         while stack:
-            nid = stack.pop()
-            if nid in nodes:
+            r = stack.pop()
+            if r in seen:
                 continue
-            nodes.add(nid)
-            touching = list(self._out.get(nid, ())) + list(self._in.get(nid, ()))
-            for f in touching:
-                if f not in flows:
-                    flows.add(f)
-                    if f.src not in nodes:
-                        stack.append(f.src)
-                    if f.dst not in nodes:
-                        stack.append(f.dst)
-        return flows
+            seen.add(r)
+            d, nid = r
+            cap = (self.node_uplink(nid) if d == "u"
+                   else self.node_downlink(nid))
+            if not math.isfinite(cap):
+                continue
+            side = self._out if d == "u" else self._in
+            for f in side.get(nid, ()):
+                add_flow(f)
+        return list(flows)
 
-    def _reallocate(self, seeds) -> None:
+    def _reallocate(self, seed_resources, seed_flows=()) -> None:
         """Progressive filling (exact max-min fair share) over the affected
         component: repeatedly find the most-loaded resource (a node's up or
         down direction), freeze its flows at the equal share, give leftover
         capacity back, repeat. Then reschedule every completion event."""
-        flows = self._component(seeds)
+        flows = self._component(seed_resources, seed_flows)
         if not flows:
             return
         self.reallocations += 1
         now = self.sim.now
-        old_rate = {}
+        old_rate = []
         for f in flows:                       # drain progress at old rates
             if f.rate > 0.0 and now > f.t_last:
                 f.remaining = max(0.0, f.remaining - f.rate * (now - f.t_last))
             f.t_last = now
-            old_rate[f] = f.rate
+            old_rate.append(f.rate)
         # resources: ("u", node) = uplink, ("d", node) = downlink
         cap: Dict[tuple, float] = {}
-        users: Dict[tuple, Set[_Flow]] = defaultdict(set)
+        users: Dict[tuple, list] = {}
         for f in flows:
-            up = self.node_uplink(f.src)
-            if math.isfinite(up):
-                cap[("u", f.src)] = up
-                users[("u", f.src)].add(f)
-            down = self.node_downlink(f.dst)
-            if math.isfinite(down):
-                cap[("d", f.dst)] = down
-                users[("d", f.dst)].add(f)
-        unfrozen = set(flows)
+            ru = ("u", f.src)
+            if ru not in cap:
+                up = self.node_uplink(f.src)
+                if math.isfinite(up):
+                    cap[ru] = up
+                    users[ru] = [f]
+            elif ru in users:
+                users[ru].append(f)
+            rd = ("d", f.dst)
+            if rd not in cap:
+                down = self.node_downlink(f.dst)
+                if math.isfinite(down):
+                    cap[rd] = down
+                    users[rd] = [f]
+            elif rd in users:
+                users[rd].append(f)
+        unfrozen = dict.fromkeys(flows)
         while unfrozen:
             shares = [(cap[r] / live, r) for r, fs in users.items()
-                      if (live := len(fs & unfrozen))]
+                      if (live := sum(1 for f in fs if f in unfrozen))]
             if not shares:                    # no finite resource binds
                 for f in unfrozen:
                     f.rate = math.inf
@@ -333,14 +407,16 @@ class Network:
             # strand the residual's flows at rate 0 — a silent hang.
             for _, r in [p for p in shares
                          if p[0] <= best + 1e-9 * max(abs(best), 1.0)]:
-                for f in users[r] & unfrozen:
+                for f in users[r]:
+                    if f not in unfrozen:
+                        continue
                     f.rate = share
-                    unfrozen.discard(f)
+                    del unfrozen[f]
                     other = ("d", f.dst) if r[0] == "u" else ("u", f.src)
                     if other in cap and other != r:
                         cap[other] = max(0.0, cap[other] - share)
-        for f in flows:
-            if f.rate == old_rate[f] and f.handle is not None:
+        for f, old in zip(flows, old_rate):
+            if f.rate == old and f.handle is not None:
                 continue       # unchanged rate: the old event is still right
             if f.handle is not None:
                 f.handle.cancel()

@@ -19,8 +19,10 @@ import numpy as np
 
 from repro.config import ModestConfig, TrainConfig
 from repro.core import messages as M
+from repro.core.activity import ActivityTracker
 from repro.core.hashing import sample_order
 from repro.core.node import ModestNode
+from repro.core.registry import JOINED, Registry
 from repro.core.tasks import AbstractTask, LearningTask
 from repro.data.loader import FederatedData
 from repro.sim.churn import AvailabilityDriver
@@ -84,6 +86,10 @@ class SessionResult:
     rounds_completed: int = 0
     final_metrics: dict = field(default_factory=dict)
     churn_events: int = 0             # availability transitions fired
+    # training resources (paper §4.5): node-seconds of on-device compute,
+    # including compute burned by trainings that were cancelled/crashed
+    train_node_seconds: float = 0.0
+    trainings_completed: int = 0
 
     def metric_curve(self, key: str):
         return [(h["t"], h[key]) for h in self.history if key in h]
@@ -158,6 +164,13 @@ class ModestSession:
             [i for i in ids if i != fixed_id],
             self._trace_offline, self._trace_online, network=self.net)
         offline_now.discard(fixed_id)
+        # One shared bootstrap view, adopted copy-on-write by every node:
+        # building n separate n-entry registries made session construction
+        # O(n²) — the dominant startup cost at n = 1000.
+        base_reg, base_act = Registry(), ActivityTracker()
+        for nid in ids:
+            base_reg.update(nid, 1, JOINED)
+            base_act.update(nid, 0)
         self.nodes: Dict[str, ModestNode] = {}
         for i, nid in enumerate(ids):
             node = ModestNode(
@@ -166,7 +179,7 @@ class ModestSession:
                 train_speed=float(speeds[i]),
                 on_aggregate=self._on_aggregate,
                 fixed_aggregator=fixed_id)
-            node.bootstrap(ids)
+            node.bootstrap(ids, base=(base_reg, base_act))
             self.nodes[nid] = node
         for nid in offline_now:
             self.nodes[nid].online = False
@@ -212,12 +225,17 @@ class ModestSession:
     # ------------------------------------------------------------------ hooks
 
     def _best_connected(self, ids) -> str:
-        """§4.3: the FL server = node with lowest median latency to others."""
+        """§4.3: the FL server = node with lowest median latency to others.
+
+        Vectorized over the latency matrix: the per-pair python loop was
+        O(n²) ``latency()`` calls, several seconds of setup at n = 1000.
+        """
         if len(ids) == 1:
             return ids[0]
-        med = {nid: np.median([self.net.latency(nid, o) for o in ids if o != nid])
-               for nid in ids}
-        return min(med, key=med.get)
+        m = self.net.latency_matrix(ids)
+        np.fill_diagonal(m, np.nan)
+        med = np.nanmedian(m, axis=1)
+        return ids[int(np.argmin(med))]
 
     def _on_aggregate(self, k: int, params, node: ModestNode) -> None:
         now = self.sim.now
@@ -300,6 +318,8 @@ class ModestSession:
         self.result.rounds_completed = self._latest_round_seen
         for node in self.nodes.values():
             self.result.sample_durations.extend(node.sample_durations)
+            self.result.train_node_seconds += node.train_seconds
+            self.result.trainings_completed += node.trainings_completed
         self.result.sample_durations.sort()
         if self.result.history:
             self.result.final_metrics = {
@@ -326,17 +346,32 @@ class _DSGDNode:
         self.round = 1
         self.trained = False
         self.inbox: Dict[int, list] = {}
+        self.train_seconds = 0.0
+        self.trainings_completed = 0
+        self._train_started_at = 0.0
+        self._train_dur = 0.0
+        self._went_offline_at = None
 
     def start_round(self):
         self.trained = False
         dur = self.session.task.train_time(
             self.data, batch_size=self.session.tcfg.batch_size,
             epochs=1, speed=self.speed)
+        self._train_started_at = self.sim.now
+        self._train_dur = dur
         self.sim.schedule(dur, self.finish_train)
 
     def finish_train(self):
         if not self.online:
-            return                     # crashed mid-train: drop the round
+            # crashed mid-train: drop the round, but the compute burned up
+            # to the crash still counts as consumed training resources
+            if self._went_offline_at is not None:
+                self.train_seconds += max(0.0, min(
+                    self._went_offline_at - self._train_started_at,
+                    self._train_dur))
+            return
+        self.train_seconds += self._train_dur
+        self.trainings_completed += 1
         if self.params is not None:
             self.params = self.session.task.local_train(
                 self.params, self.data,
@@ -407,18 +442,31 @@ class DSGDSession:
             self.nodes[str(i)] = node
         self.churn_driver, offline_now = _churn_setup(
             self.sim, profile, churn_from_profile, list(self.nodes),
-            lambda nid: setattr(self.nodes[nid], "online", False),
-            lambda nid: setattr(self.nodes[nid], "online", True),
+            self._trace_offline, self._trace_online,
             network=self.net)
         for nid in offline_now:
             self.nodes[nid].online = False
+
+    def _trace_offline(self, nid: str) -> None:
+        node = self.nodes[nid]
+        node.online = False
+        node._went_offline_at = self.sim.now
+
+    def _trace_online(self, nid: str) -> None:
+        node = self.nodes[nid]
+        node.online = True
+        node._went_offline_at = None
 
     def on_round(self, node_id: str, new_round: int, params) -> None:
         if new_round % self.eval_every == 0 and params is not None:
             self._snapshots.setdefault(new_round, [])
             if len(self._snapshots[new_round]) < 8:   # sample of local models
                 self._snapshots[new_round].append((self.sim.now, params))
-        if node_id == "0":
+        # Population-level progression: first completion of each round by
+        # *any* node. Observing only node "0" (the pre-PR-3 behaviour)
+        # made round_times — and with it repro.eval's time-to-round — an
+        # artifact of one node's availability trace under churn.
+        if new_round > self.result.rounds_completed:
             self.result.round_times.append((self.sim.now, new_round))
             self.result.rounds_completed = new_round
 
@@ -442,6 +490,9 @@ class DSGDSession:
                 self.result.history.append({"t": t, "round": k, **mean, **std})
         self.result.usage = self.net.usage_summary()
         self.result.overhead_fraction = self.net.overhead_fraction()
+        for node in self.nodes.values():
+            self.result.train_node_seconds += node.train_seconds
+            self.result.trainings_completed += node.trainings_completed
         if self.result.history:
             self.result.final_metrics = {
                 k: v for k, v in self.result.history[-1].items()
@@ -469,6 +520,9 @@ class _GossipNode:
         self.params = None
         self.cycles = 0
         self.loop_live = False         # a cycle/done event is in flight
+        self.train_seconds = 0.0
+        self.trainings_completed = 0
+        self._went_offline_at = None
 
     def start(self):
         self.sim.schedule(self.period * (0.5 + 0.5 * (int(self.node_id) % 7) / 7),
@@ -483,11 +537,17 @@ class _GossipNode:
         dur = self.session.task.train_time(
             self.data, batch_size=self.session.tcfg.batch_size,
             epochs=1, speed=self.speed)
+        started_at = self.sim.now
 
         def done():
             if not self.online:
                 self.loop_live = False  # went offline mid-train: drop work
+                if self._went_offline_at is not None:
+                    self.train_seconds += max(0.0, min(
+                        self._went_offline_at - started_at, dur))
                 return
+            self.train_seconds += dur
+            self.trainings_completed += 1
             if self.params is not None:
                 self.params = self.session.task.local_train(
                     self.params, self.data,
@@ -564,20 +624,27 @@ class GossipSession:
             self.nodes[nid].online = False
 
     def _trace_offline(self, nid: str) -> None:
-        self.nodes[nid].online = False
+        node = self.nodes[nid]
+        node.online = False
+        node._went_offline_at = self.sim.now
 
     def _trace_online(self, nid: str) -> None:
         node = self.nodes[nid]
         if not node.online:
             node.online = True
+            node._went_offline_at = None
             if not node.loop_live:                 # resume a dead gossip loop
                 node.loop_live = True
                 self.sim.schedule(0.0, node.cycle)
 
     def on_cycle(self, node_id, cycle, params):
-        if node_id == "0":
+        # Cycle progression is population-level (first node to reach each
+        # cycle count); model-quality snapshots stay pinned to node "0"
+        # as the fixed observer so the curve tracks one model's history.
+        if cycle > self.result.rounds_completed:
             self.result.round_times.append((self.sim.now, cycle))
             self.result.rounds_completed = cycle
+        if node_id == "0":
             if cycle % self.eval_every == 0 and params is not None:
                 self._snapshots[cycle] = (self.sim.now, params)
 
@@ -596,6 +663,9 @@ class GossipSession:
                 self.result.history.append({"t": t, "round": k, **m})
         self.result.usage = self.net.usage_summary()
         self.result.overhead_fraction = self.net.overhead_fraction()
+        for node in self.nodes.values():
+            self.result.train_node_seconds += node.train_seconds
+            self.result.trainings_completed += node.trainings_completed
         if self.result.history:
             self.result.final_metrics = {
                 k: v for k, v in self.result.history[-1].items()

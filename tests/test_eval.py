@@ -1,0 +1,86 @@
+"""`repro.eval` — metric math on synthetic results + one real matrix."""
+
+import math
+
+import pytest
+
+from repro.eval import (EvalMetrics, compare, evaluate_session,
+                        scenario_matrix, time_to_metric, time_to_round)
+from repro.sim.runner import SessionResult
+
+
+def _result(**kw):
+    r = SessionResult()
+    for k, v in kw.items():
+        setattr(r, k, v)
+    return r
+
+
+def test_time_to_metric_first_crossing():
+    r = _result(history=[{"t": 10.0, "accuracy": 0.2},
+                         {"t": 30.0, "accuracy": 0.55},
+                         {"t": 20.0, "accuracy": 0.5},
+                         {"t": 40.0, "accuracy": 0.4}])   # non-monotone ok
+    assert time_to_metric(r, 0.5) == 20.0                 # sorted by t
+    assert time_to_metric(r, 0.9) is None
+    assert time_to_metric(r, 0.45, key="accuracy",
+                          higher_is_better=False) == 10.0
+
+
+def test_time_to_round_proxy():
+    r = _result(round_times=[(5.0, 1), (9.0, 3), (12.0, 4)])
+    assert time_to_round(r, 2) == 9.0                     # first k >= 2
+    assert time_to_round(r, 9) is None
+
+
+def test_evaluate_session_collects_three_axes():
+    r = _result(round_times=[(5.0, 1), (8.0, 2)],
+                usage={"total_bytes": 100, "sent_bytes": 60},
+                train_node_seconds=12.5, trainings_completed=3,
+                rounds_completed=2)
+    m = evaluate_session(r, algo="modest", target_round=2)
+    assert m.time_to_target_s == 8.0
+    assert m.communication_bytes == 60
+    assert m.train_node_seconds == 12.5
+
+
+def test_compare_ratios_and_wedged_baseline():
+    base = EvalMetrics("modest", 10.0, 1000, 50.0)
+    slow = EvalMetrics("dsgd", 30.0, 15000, 500.0)
+    dead = EvalMetrics("gossip", None, 400, 25.0)
+    out = compare({"modest": base, "dsgd": slow, "gossip": dead})
+    assert out["dsgd"] == {"time_to_target_x": 3.0,
+                           "communication_x": 15.0,
+                           "train_resources_x": 10.0}
+    assert out["gossip"]["time_to_target_x"] == math.inf  # never reached
+    with pytest.raises(KeyError):
+        compare({"dsgd": slow})
+
+
+def test_scenario_matrix_single_invocation_covers_algos_and_regimes():
+    out = scenario_matrix(algos=("modest", "dsgd", "fedavg"),
+                          regimes=("homogeneous", "diurnal"),
+                          n=16, seeds=(0,), duration=60.0, target_round=3)
+    algos = {row["algo"] for row in out["summary"]}
+    regimes = {row["regime"] for row in out["summary"]}
+    assert algos == {"modest", "dsgd", "fedavg"}
+    assert regimes == {"homogeneous", "diurnal"}
+    assert len(out["rows"]) == 6
+    for row in out["rows"]:
+        assert row["communication_gb"] > 0
+        assert row["train_node_hours"] >= 0
+    # ratios exist vs the modest baseline for every regime
+    assert set(out["ratios"]) == {"homogeneous", "diurnal"}
+    for regime in out["ratios"].values():
+        assert set(regime) == {"dsgd", "fedavg"}
+        for axes in regime.values():
+            assert set(axes) == {"time_to_target_x", "communication_x",
+                                 "train_resources_x"}
+
+
+def test_unknown_algo_and_regime_raise():
+    from repro.eval import Scenario, run_scenario
+    with pytest.raises(ValueError):
+        run_scenario(Scenario(algo="sgd??", regime="diurnal"))
+    with pytest.raises(ValueError):
+        Scenario(algo="modest", regime="lunar").profile()

@@ -1,0 +1,129 @@
+"""Kernel ↔ reference parity across dtypes and execution modes.
+
+``aggregate_pytree`` / ``quantized_delta_push`` / ``quantized_delta_pull``
+must agree with the pure-jnp oracles in ``kernels/ref.py`` for every leaf
+dtype the protocol ships (fp32 model weights, bf16 compressed weights,
+integer optimizer counters — including the PR-2 round-to-nearest path),
+in interpret mode everywhere and in compiled mode wherever the backend
+can compile Pallas (TPU; CPU raises, so compiled runs are skipped there,
+not silently dropped).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (aggregate_pytree, quantized_delta_pull,
+                           quantized_delta_push)
+from repro.kernels import ref
+from repro.kernels.aggregate import TILE
+
+needs_compiled = pytest.mark.skipif(
+    jax.default_backend() == "cpu",
+    reason="Pallas compiled mode is unsupported on the CPU backend")
+
+MODES = [pytest.param(True, id="interpret"),
+         pytest.param(False, id="compiled", marks=needs_compiled)]
+
+
+def _models(dtype, P=4, n=3 * TILE - 5, seed=0):
+    key = jax.random.key(seed)
+    return [
+        {"w": (jax.random.normal(jax.random.fold_in(key, p), (n,)) * 2)
+              .astype(dtype),
+         "b": (jax.random.normal(jax.random.fold_in(key, 100 + p), (37, 11))
+               * 0.5).astype(dtype)}
+        for p in range(P)
+    ]
+
+
+@pytest.mark.parametrize("interpret", MODES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_aggregate_pytree_float_parity(dtype, interpret):
+    models = _models(dtype)
+    w = jnp.asarray([0.5, 1.0, 2.0, 0.25], jnp.float32)
+    got = aggregate_pytree(models, w, interpret=interpret)
+    for leaf in ("w", "b"):
+        stacked = jnp.stack([jnp.ravel(m[leaf]) for m in models])
+        want = ref.aggregate_ref(stacked, w).reshape(models[0][leaf].shape)
+        assert got[leaf].dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(got[leaf], np.float32),
+            np.asarray(want, np.float32),
+            rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("interpret", MODES)
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.int16])
+def test_aggregate_pytree_integer_parity_rounds_to_nearest(dtype, interpret):
+    """Integer leaves ride through the kernel as fp32 and must come back
+    *rounded*, matching round(ref) — the PR-2 truncation regression."""
+    models = [{"step": jnp.asarray([7, 100, -3], dtype)},
+              {"step": jnp.asarray([8, 101, -4], dtype)}]
+    w = jnp.asarray([1.0, 1.0], jnp.float32)
+    got = aggregate_pytree(models, w, interpret=interpret)
+    stacked = jnp.stack([m["step"].astype(jnp.float32) for m in models])
+    want = jnp.round(ref.aggregate_ref(stacked, w))
+    assert got["step"].dtype == dtype
+    # fp mean of (7,8) is 7.5 -> 8 under round-half-even; truncation gave 7
+    np.testing.assert_array_equal(np.asarray(got["step"]),
+                                  np.asarray(want, np.int64).astype(dtype))
+
+
+@pytest.mark.parametrize("interpret", MODES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantized_delta_push_matches_quantize_ref(dtype, interpret):
+    n = 2 * TILE
+    key = jax.random.key(5)
+    theta = {"w": (jax.random.normal(key, (n,)) * 3).astype(dtype)}
+    base = jax.tree.map(lambda x: (x * 0.9).astype(dtype), theta)
+    codes, scales = quantized_delta_push(theta, base, interpret=interpret)
+    delta = (theta["w"].astype(jnp.float32)
+             - base["w"].astype(jnp.float32))
+    want_q, want_s = ref.quantize_ref(delta)
+    assert codes["w"].dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(scales["w"][: n // TILE]),
+                               np.asarray(want_s), rtol=1e-6)
+    got_q = np.asarray(codes["w"][:n], np.int32)
+    ref_q = np.asarray(want_q, np.int32)
+    if dtype == jnp.float32:
+        np.testing.assert_array_equal(got_q, ref_q)
+    else:
+        # bf16 deltas are coarse, so x/scale frequently lands within one
+        # division ulp of a rounding tie; the kernel and the oracle may
+        # legitimately break such ties differently. Codes must still
+        # agree within one quantization step, and only at tie points.
+        diff = np.abs(got_q - ref_q)
+        assert diff.max() <= 1
+        assert (diff != 0).mean() < 0.02
+        ties = np.abs(delta / np.repeat(np.asarray(want_s), TILE))[diff != 0]
+        np.testing.assert_allclose(np.asarray(ties) % 1.0, 0.5, atol=1e-4)
+
+
+@pytest.mark.parametrize("interpret", MODES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantized_delta_roundtrip_parity(dtype, interpret):
+    """push → pull reconstruction equals the reference dequantize applied
+    to the reference quantize, bit-for-bit in fp32 accumulation."""
+    n = TILE + 129
+    key = jax.random.key(11)
+    theta = {"w": (jax.random.normal(key, (n,))).astype(dtype),
+             "b": (jnp.linspace(-2, 2, 257)).astype(dtype)}
+    base = jax.tree.map(lambda x: (x * 0.8 + 0.05).astype(x.dtype), theta)
+    codes, scales = quantized_delta_push(theta, base, interpret=interpret)
+    back = quantized_delta_pull(codes, scales, base, interpret=interpret)
+    for leaf in ("w", "b"):
+        d = (theta[leaf].astype(jnp.float32)
+             - base[leaf].astype(jnp.float32)).ravel()
+        pad = (-d.shape[0]) % TILE
+        q, s = ref.quantize_ref(jnp.pad(d, (0, pad)))
+        want_d = ref.dequantize_ref(q, s)[: d.shape[0]]
+        want = (base[leaf].astype(jnp.float32).ravel()
+                + want_d).reshape(base[leaf].shape).astype(dtype)
+        assert back[leaf].dtype == dtype
+        np.testing.assert_allclose(np.asarray(back[leaf], np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=2e-2 if dtype == jnp.bfloat16
+                                   else 1e-6,
+                                   atol=1e-3)

@@ -1,0 +1,39 @@
+"""Paper-scale smoke test: 1000 nodes must stay cheap.
+
+Guards the PR-3 complexity wins (copy-on-write views, shared bootstrap,
+direction-aware flow components, digest memo): a MoDeST round at the
+paper's largest population (n = 1000, diurnal trace, contention on) has
+to complete inside a hard event *and* wall-clock budget. Before the
+optimizations this configuration took minutes just to construct; if it
+regresses toward that, this fails long before CI times out.
+
+Budgets are deliberately loose (≈10× current cost) so the test pins the
+complexity class, not the constant factor of one machine.
+"""
+
+import time
+
+from repro.sim.runner import ModestSession
+from repro.traces import diurnal_profile
+
+WALL_BUDGET_S = 60.0          # current: ~2 s for build + 40 sim-seconds
+EVENT_BUDGET = 60_000         # current: ~7k events for 40 sim-seconds
+
+
+def test_thousand_node_modest_round_within_budget():
+    t0 = time.monotonic()
+    sess = ModestSession(profile=diurnal_profile(n=1000, seed=0),
+                         contention=True)
+    res = sess.run(40.0)
+    wall = time.monotonic() - t0
+    assert res.rounds_completed >= 1, "no round completed at n=1000"
+    assert not sess.sim.exhausted
+    assert sess.sim.events_processed < EVENT_BUDGET, (
+        f"event blow-up: {sess.sim.events_processed} events for 40 "
+        f"simulated seconds at n=1000")
+    assert wall < WALL_BUDGET_S, (
+        f"wall-clock blow-up: {wall:.1f}s for 40 simulated seconds at "
+        f"n=1000 (budget {WALL_BUDGET_S}s)")
+    # the three eval axes must be live at scale, too
+    assert res.train_node_seconds > 0.0
+    assert res.usage["total_bytes"] > 0
