@@ -41,6 +41,8 @@ def _path_str(p) -> str:
 
 
 def save(path: str, tree, meta: Optional[dict] = None) -> None:
+    from repro.engine.flat import as_tree
+    tree = as_tree(tree)     # checkpoints are a FlatModel task boundary
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     np.savez(path if path.endswith(".npz") else path + ".npz", **flat)

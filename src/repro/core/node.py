@@ -33,7 +33,8 @@ class ModestNode:
                  tcfg: TrainConfig, task: LearningTask, data=None, *,
                  train_speed: float = 0.05,
                  on_aggregate: Optional[Callable] = None,
-                 fixed_aggregator: Optional[str] = None):
+                 fixed_aggregator: Optional[str] = None,
+                 engine=None):
         self.node_id = node_id
         self.sim = sim
         self.net = net
@@ -41,6 +42,15 @@ class ModestNode:
         self.tcfg = tcfg
         self.task = task
         self.data = data
+        # Compute engine (repro.engine): sessions share one BatchedEngine
+        # across the population so a sampled cohort's trainings run as one
+        # vmapped batch. Default: the sequential per-node path.
+        if engine is None:
+            from repro.engine.cohort import SequentialEngine
+            engine = SequentialEngine(task)
+        self.engine = engine
+        if data is not None:
+            engine.register_client(node_id, data)
         self.train_speed = train_speed
         self.on_aggregate = on_aggregate       # session hook: (k, params, node)
         # FL-emulation mode (§4.3): single fixed aggregator, no sampling.
@@ -243,7 +253,7 @@ class ModestNode:
         models = self._theta_list
         self._theta_list = []
         if models and models[0].params is not None:
-            agg = self.task.aggregate([m.params for m in models])
+            agg = self.engine.aggregate([m.params for m in models])
             payload = M.ModelPayload(params=agg)
         else:
             nbytes = models[0].nbytes if models else self.task.model_bytes()
@@ -257,6 +267,17 @@ class ModestNode:
             if not self.online:                # crashed while sampling
                 return
             self.sample_durations.append((t0, self.sim.now - t0))
+            if payload.params is not None:
+                # The TrainMsgs below are immutable once sent, so the
+                # engine may compute the cohort's trainings as one batch
+                # before they arrive (WAN transfers usually outlast the
+                # train durations, which would otherwise fragment the
+                # cohort into single-node flushes).
+                self.engine.plan_cohort(
+                    k, sample, payload.params,
+                    batch_size=self.tcfg.batch_size,
+                    epochs=self.mcfg.local_steps,
+                    seed=self.tcfg.seed + k)
             v = self.view()
             for j in sample:
                 m = M.TrainMsg(sender=self.node_id, round_k=k,
@@ -290,6 +311,14 @@ class ModestNode:
         self._train_round_pending = k
         self._train_started_at = self.sim.now
         incoming = msg.model
+        if incoming.params is not None and self.data is not None:
+            # Training starts now in simulated time; the engine may batch
+            # this node's compute with the rest of the sampled cohort
+            # (results are demanded at `finish`, duration later).
+            self.engine.submit(self.node_id, k, incoming.params, self.data,
+                               batch_size=self.tcfg.batch_size,
+                               epochs=self.mcfg.local_steps,
+                               seed=self.tcfg.seed + k)
 
         def finish() -> None:
             self._train_handle = None
@@ -302,8 +331,8 @@ class ModestNode:
             self.trainings_completed += 1
             self._train_done.add(k)
             if incoming.params is not None:
-                updated = self.task.local_train(
-                    incoming.params, self.data,
+                updated = self.engine.result(
+                    self.node_id, k, incoming.params, self.data,
                     batch_size=self.tcfg.batch_size,
                     epochs=self.mcfg.local_steps, seed=self.tcfg.seed + k)
                 payload = M.ModelPayload(params=updated)

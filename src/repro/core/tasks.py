@@ -24,6 +24,10 @@ class LearningTask:
     """Interface; concrete tasks in ``repro.models.tasks``."""
 
     name = "abstract"
+    # Tasks that expose the FlatModel/cohort surface (flat_spec +
+    # masked-batch training) opt in; the engine auto-selection in
+    # ``repro.engine.make_engine`` keys off this.
+    supports_cohort = False
 
     def init_params(self, seed: int = 0):
         raise NotImplementedError
@@ -36,10 +40,25 @@ class LearningTask:
         raise NotImplementedError
 
     def aggregate(self, models: Sequence, weights: Optional[Sequence[float]] = None):
-        """AVG(Θ) — weighted model mean (Alg. 4 l.21)."""
+        """AVG(Θ) — weighted model mean (Alg. 4 l.21).
+
+        Zero-total weight raises (``tree_weighted_mean`` documents the
+        contract shared by every aggregation path).
+        """
         if weights is None:
             weights = [1.0] * len(models)
         return tree_weighted_mean(list(models), np.asarray(weights, np.float32))
+
+    def evaluate_many(self, models: Sequence, test) -> list:
+        """Evaluate several models; tasks with a vmapped path override."""
+        return [self.evaluate(p, test) for p in models]
+
+    def aggregate_sequential(self, models: Sequence,
+                             weights: Optional[Sequence[float]] = None):
+        """The reference aggregation path (what ``engine="sequential"``
+        runs). Defaults to :meth:`aggregate`; tasks that override
+        ``aggregate`` with an engine path keep the legacy one here."""
+        return self.aggregate(models, weights)
 
     _model_bytes_cache: Optional[int] = None
 

@@ -1,0 +1,30 @@
+"""Fused flat-model compute engine (PR 4).
+
+Models live as single contiguous fp32 buffers inside the hot loop:
+
+* :mod:`repro.engine.flat`    — FlatSpec / FlatModel (pack once, unpack at
+  task boundaries: eval, checkpointing, wire)
+* :mod:`repro.engine.cohort`  — vmapped cohort training (S·B dispatches →
+  B) + the sequential reference engine
+* :mod:`repro.engine.optim_flat` — row-wise optimizers on ``(S, N)``
+* :mod:`repro.engine.lowering`  — per-family masked-loss lowerings
+
+Whole-model one-pass aggregation (one ``pallas_call`` per model, with a
+fused aggregate→quantize variant) lives in :mod:`repro.kernels.fused` and
+is surfaced as :func:`repro.kernels.aggregate_flatmodel`.
+
+See ``docs/ENGINE.md`` for layout, semantics, and when to fall back to
+``engine="sequential"``.
+"""
+
+from repro.engine.cohort import (  # noqa: F401
+    BatchedEngine,
+    SequentialEngine,
+    make_engine,
+)
+from repro.engine.flat import (  # noqa: F401
+    FlatModel,
+    FlatSpec,
+    as_buffer,
+    as_tree,
+)

@@ -1,0 +1,164 @@
+"""FlatModel: contiguous-buffer model representation for the compute engine.
+
+The protocol core moves *pytrees* between nodes; the compute hot loop wants
+*vectors*. A :class:`FlatSpec` is computed once per task and records, for
+every leaf of the parameter pytree: byte offsets into one contiguous
+``(N,)`` fp32 buffer, the original shape/dtype, and a precomputed
+integer-leaf mask (optimizer step counters and token counts must round to
+nearest on the way back out — see PR-2's truncation fix).
+
+Inside the hot loop (aggregation, cohort training) models live as single
+``(N,)`` buffers (stacked to ``(P, N)`` / ``(S, N)``); unflattening back to
+the pytree happens only at task boundaries — evaluation, checkpointing,
+and the wire for non-engine consumers.
+
+Precision note: the flat buffer is fp32. bf16 leaves round-trip exactly
+(bf16 ⊂ fp32); integer leaves are exact up to 2^24 (the protocol's integer
+leaves are step/round counters, far below that) and are rounded to nearest
+when unpacked.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class FlatSpec:
+    """Layout of one model family's parameter pytree in a flat buffer."""
+
+    def __init__(self, treedef, shapes, dtypes):
+        self.treedef = treedef
+        self.shapes: Tuple[tuple, ...] = tuple(tuple(s) for s in shapes)
+        self.dtypes: Tuple[np.dtype, ...] = tuple(np.dtype(d) for d in dtypes)
+        self.sizes = tuple(int(np.prod(s)) if s else 1 for s in self.shapes)
+        offs = np.cumsum((0,) + self.sizes)
+        self.offsets = tuple(int(o) for o in offs[:-1])
+        self.n = int(offs[-1])
+        # wire/storage size of the *original* pytree (per-leaf dtypes), not
+        # of the fp32 working buffer — byte accounting must not change when
+        # a model rides through the engine.
+        self.nbytes = sum(s * d.itemsize for s, d in zip(self.sizes, self.dtypes))
+        mask = np.zeros(self.n, np.bool_)
+        for off, size, dt in zip(self.offsets, self.sizes, self.dtypes):
+            if np.issubdtype(dt, np.integer):
+                mask[off:off + size] = True
+        self.int_mask = mask              # (n,) True where the leaf is integer
+        self.has_int = bool(mask.any())
+
+    @classmethod
+    def from_tree(cls, tree) -> "FlatSpec":
+        """Works on concrete arrays and abstract leaves (eval_shape)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        shapes = [l.shape if hasattr(l, "shape") else np.shape(l)
+                  for l in leaves]
+        dtypes = [l.dtype if hasattr(l, "dtype") else np.asarray(l).dtype
+                  for l in leaves]
+        return cls(treedef, shapes, dtypes)
+
+    # ------------------------------------------------------------------ pack
+
+    def pack(self, tree) -> jnp.ndarray:
+        """pytree -> (n,) fp32 buffer. Traced-compatible (used inside jit)."""
+        leaves = self.treedef.flatten_up_to(tree)
+        return jnp.concatenate(
+            [jnp.ravel(l).astype(jnp.float32) for l in leaves])
+
+    def pack_stacked(self, tree) -> jnp.ndarray:
+        """pytree with a leading stack axis S on every leaf -> (S, n) fp32."""
+        leaves = self.treedef.flatten_up_to(tree)
+        s = leaves[0].shape[0]
+        return jnp.concatenate(
+            [l.reshape(s, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+    def pack_many(self, trees: Sequence) -> jnp.ndarray:
+        """list of P pytrees -> (P, n) fp32."""
+        return jnp.stack([self.pack(t) for t in trees])
+
+    # ---------------------------------------------------------------- unpack
+
+    def _leaf_views(self, buf, lead: tuple):
+        out = []
+        for off, size, shape, dt in zip(self.offsets, self.sizes,
+                                        self.shapes, self.dtypes):
+            x = buf[..., off:off + size].reshape(lead + shape)
+            if np.issubdtype(dt, np.integer):
+                x = jnp.round(x)
+            out.append(x.astype(dt))
+        return out
+
+    def unpack(self, buf) -> Any:
+        """(n,) buffer -> pytree with original shapes/dtypes."""
+        return self.treedef.unflatten(self._leaf_views(buf, ()))
+
+    def unpack_stacked(self, buf) -> Any:
+        """(S, n) -> pytree whose every leaf has a leading S axis."""
+        return self.treedef.unflatten(self._leaf_views(buf, (buf.shape[0],)))
+
+    def __eq__(self, other):
+        return (isinstance(other, FlatSpec)
+                and self.treedef == other.treedef
+                and self.shapes == other.shapes
+                and self.dtypes == other.dtypes)
+
+    def __hash__(self):
+        return hash((self.treedef, self.shapes, self.dtypes))
+
+    def __repr__(self):
+        return (f"FlatSpec(n={self.n}, leaves={len(self.shapes)}, "
+                f"nbytes={self.nbytes})")
+
+
+@dataclass(eq=False)           # eq would compare jnp buffers and raise;
+class FlatModel:               # identity comparison is the meaningful one
+    """A model as one fp32 buffer + the spec to rebuild the pytree.
+
+    Payloads carry FlatModel through the hot loop; ``tree`` materializes
+    the pytree lazily at task boundaries (and caches it).
+    """
+
+    buffer: jnp.ndarray                  # (n,) fp32
+    spec: FlatSpec
+    _tree: Optional[Any] = field(default=None, repr=False, compare=False)
+
+    @property
+    def tree(self):
+        if self._tree is None:
+            self._tree = self.spec.unpack(self.buffer)
+        return self._tree
+
+    @property
+    def wire_bytes(self) -> int:
+        """Byte size on the wire = size of the original-dtype pytree."""
+        return self.spec.nbytes
+
+    @classmethod
+    def pack(cls, tree, spec: Optional[FlatSpec] = None) -> "FlatModel":
+        if isinstance(tree, FlatModel):
+            return tree
+        spec = spec or FlatSpec.from_tree(tree)
+        return cls(_jit_pack(spec)(tree), spec)
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_pack(spec: FlatSpec):
+    return jax.jit(spec.pack)
+
+
+def as_tree(params):
+    """Boundary helper: FlatModel -> pytree; anything else passes through."""
+    if isinstance(params, FlatModel):
+        return params.tree
+    return params
+
+
+def as_buffer(params, spec: FlatSpec):
+    """Hot-loop helper: pytree or FlatModel -> (n,) fp32 buffer."""
+    if isinstance(params, FlatModel):
+        return params.buffer
+    return _jit_pack(spec)(params)

@@ -1,0 +1,113 @@
+"""Per-family masked-loss lowerings for the batched cohort engine.
+
+The engine's step must (a) take a per-row loss mask — padded batch rows
+contribute exactly zero gradient (the ragged-tail fix) — and (b) lower
+well under ``vmap`` on the backends we actually run on. The generic path
+vmaps the model's own ``loss_fn`` (families honor ``batch["mask"]``). The
+CNN family additionally gets a hand-lowered apply that is numerically
+equivalent (same contraction order per op, fp32) but avoids two XLA-CPU
+potholes measured on this container:
+
+* ``reduce_window``/``select_and_scatter`` max-pool → reshape-based 2×2
+  max (identical for non-overlapping stride-2 windows, ~7× faster bwd);
+* the second conv → im2col matmul (patches concatenated in ``(di,dj,c)``
+  order so ``w.reshape(-1, co)`` matches), ~4× faster bwd than the
+  conv-transpose lowering. conv1 stays ``lax.conv`` — its im2col patch
+  materialization costs more than it saves at 3 input channels.
+
+Parity with the sequential path is property-tested (tolerance-tiered
+fp32/bf16) in ``tests/test_engine.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn import _conv as _conv_lax   # same op as the model's
+
+
+def _conv_im2col(x, w, b):
+    kh, kw, ci, co = w.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    H, W = x.shape[1], x.shape[2]
+    cols = [xp[:, i:i + H, j:j + W, :]
+            for i in range(kh) for j in range(kw)]
+    patches = jnp.concatenate(cols, axis=-1)       # (B,H,W,kh*kw*ci)
+    y = patches.reshape(-1, kh * kw * ci) @ w.reshape(-1, co)
+    return jax.nn.relu(y.reshape(x.shape[0], H, W, co) + b)
+
+
+def _pool2x2(x):
+    b, H, W, C = x.shape
+    return x.reshape(b, H // 2, 2, W // 2, 2, C).max(axis=(2, 4))
+
+
+def _cnn_apply_fast(params, x):
+    h = _conv_lax(x, params["conv1"], params["b1"])
+    h = _pool2x2(h)
+    h = _conv_im2col(h, params["conv2"], params["b2"])
+    h = _pool2x2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"])
+    h = jax.nn.relu(h @ params["fc2"])
+    return h @ params["out"]
+
+
+def _cnn_masked_loss(params, batch):
+    from repro.models import layers as L
+    logits = _cnn_apply_fast(params, batch["x"])
+    labels = batch["y"].astype(jnp.int32)
+    # same shared xent as cnn.loss_fn — only the apply lowering differs
+    return L.softmax_xent(logits[:, None, :], labels[:, None],
+                          batch["mask"][:, None])
+
+
+def _cnn_fast_ok(cfg) -> bool:
+    """The reshape pool needs both spatial dims divisible by 4 (two 2×2
+    stride-2 pools); other shapes fall back to the model's own lowering
+    (reduce_window floors odd dims)."""
+    H, W, _ = cfg.cnn_image
+    return H % 4 == 0 and W % 4 == 0
+
+
+def masked_loss_for(task):
+    """Scalar masked loss ``f(params, batch)`` for one model of ``task``.
+
+    ``batch`` carries ``mask`` (B,) alongside the family's usual keys.
+    """
+    if task.cfg.family == "cnn" and _cnn_fast_ok(task.cfg):
+        return _cnn_masked_loss
+
+    def generic(params, batch):
+        loss, _metrics = task.model.loss_fn(params, batch)
+        return loss
+
+    return generic
+
+
+def eval_metrics_for(task):
+    """Metrics fn ``f(params, batch) -> dict`` for the vmapped eval sweep.
+
+    The CNN family gets the fast apply (same metric definitions as
+    ``cnn.loss_fn``); everything else evaluates through the model's own
+    ``loss_fn`` aux.
+    """
+    if task.cfg.family == "cnn" and _cnn_fast_ok(task.cfg):
+        from repro.models import layers as L
+
+        def cnn_metrics(params, batch):
+            logits = _cnn_apply_fast(params, batch["x"])
+            labels = batch["y"].astype(jnp.int32)
+            loss = L.softmax_xent(logits[:, None, :], labels[:, None])
+            acc = jnp.mean((jnp.argmax(logits, -1) == labels)
+                           .astype(jnp.float32))
+            return {"loss": loss, "accuracy": acc}
+
+        return cnn_metrics
+
+    def generic(params, batch):
+        return task.model.loss_fn(params, batch)[1]
+
+    return generic

@@ -6,6 +6,9 @@ paper, model *deltas* are int8-quantized before the aggregation collective
 (EXPERIMENTS.md §Perf).
 
 * :mod:`repro.kernels.aggregate` — tiled weighted multi-model average
+  (per-leaf path)
+* :mod:`repro.kernels.fused`     — whole-model one-pass aggregation over
+  flat ``(P, N)`` buffers + fused aggregate→quantize (FlatModel engine)
 * :mod:`repro.kernels.quantize` — per-tile int8 delta quant/dequant
 * :mod:`repro.kernels.flash_attention` — blocked online-softmax GQA
   attention (the §Perf follow-up: removes the fp32 score buffers)
@@ -17,8 +20,13 @@ are validated on CPU in interpret mode.
 """
 
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.fused import (  # noqa: F401
+    aggregate_flat_onepass,
+    aggregate_quantize_flat,
+)
 from repro.kernels.ops import (  # noqa: F401
     aggregate_flat,
+    aggregate_flatmodel,
     aggregate_pytree,
     dequantize_flat,
     quantize_flat,

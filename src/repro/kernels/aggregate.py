@@ -26,7 +26,9 @@ TILE = 16384
 def _agg_kernel(w_ref, x_ref, o_ref):
     w = w_ref[...].astype(jnp.float32)                 # (P, 1)
     x = x_ref[...].astype(jnp.float32)                 # (P, TILE)
-    total = jnp.maximum(jnp.sum(w), 1e-9)
+    # Zero-total weight raises in the public wrappers (see
+    # tree_weighted_mean's contract); the kernel assumes sum(w) > 0.
+    total = jnp.sum(w)
     acc = jnp.sum(x * w, axis=0) / total               # (TILE,)
     o_ref[...] = acc.astype(o_ref.dtype)[None]
 

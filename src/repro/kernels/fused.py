@@ -1,0 +1,159 @@
+"""Whole-model one-pass aggregation kernels (the FlatModel engine's core).
+
+The per-leaf path (:mod:`repro.kernels.aggregate` via ``aggregate_pytree``)
+launches one ``pallas_call`` per pytree leaf, plus a ravel/stack/pad round
+trip for each — per-call overhead that dominates for many-leaf models. Here
+the whole model is a single ``(P, N)`` stack of flat fp32 buffers and
+aggregation is ONE ``pallas_call``:
+
+* :func:`aggregate_flat_onepass` — masked weighted mean over P replicas.
+  Integer-leaf positions (``int_mask``) are rounded to nearest *inside*
+  the kernel, so optimizer counters survive aggregation exactly (PR-2
+  semantics) without a second pass.
+* :func:`aggregate_quantize_flat` — the fused aggregate→quantize variant:
+  emits the fp32 mean *and* int8 codes + per-subtile scales straight from
+  the accumulator, saving the extra HBM round trip of a separate quantize
+  call (mean is written once; codes/scales come from values already in
+  VMEM).
+
+Tiling: the flat tile adapts to the model — ``tile_for()`` picks the
+largest multiple of ``SUBTILE`` (= the quantization granularity, 16384
+lanes, shared with :mod:`repro.kernels.quantize`) that fits the VMEM
+budget for ``P`` replicas. Bigger tiles mean fewer grid steps — less
+per-step overhead in interpret mode and better DMA pipelining on TPU.
+Quantization scales are always per-SUBTILE regardless of the chosen tile,
+so codes are bit-identical to ``quantize_ref(mean)`` for any tiling.
+
+Zero-total-weight is a caller error and raises in the wrappers
+(:func:`repro.utils.pytree.tree_weighted_mean` documents the contract);
+the kernels themselves assume ``sum(w) > 0``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SUBTILE = 16384               # quantization granularity (= quantize.TILE)
+_VMEM_BUDGET = 6 * 1024 * 1024   # bytes for the (P, TILE) block, double-buffered
+
+
+def tile_for(n: int, p: int) -> int:
+    """Largest SUBTILE multiple ≤ VMEM budget for P fp32 replicas ≥ n/tiles."""
+    max_tile = max(SUBTILE, (_VMEM_BUDGET // (4 * max(p, 1))) // SUBTILE * SUBTILE)
+    need = -(-n // SUBTILE) * SUBTILE            # n rounded up to SUBTILE
+    return min(need, max_tile)
+
+
+def _agg_kernel(w_ref, x_ref, m_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)                  # (P, 1)
+    x = x_ref[...].astype(jnp.float32)                  # (P, TILE)
+    total = jnp.sum(w)                                  # caller guarantees > 0
+    acc = jnp.sum(x * w, axis=0) / total                # (TILE,)
+    int_mask = m_ref[...][0]                            # (TILE,)
+    acc = jnp.where(int_mask > 0, jnp.round(acc), acc)
+    o_ref[...] = acc[None]
+
+
+def _agg_quant_kernel(w_ref, x_ref, m_ref, o_ref, q_ref, s_ref):
+    w = w_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    total = jnp.sum(w)
+    acc = jnp.sum(x * w, axis=0) / total                # (TILE,)
+    int_mask = m_ref[...][0]
+    acc = jnp.where(int_mask > 0, jnp.round(acc), acc)
+    o_ref[...] = acc[None]
+    # quantize the mean while it is still in VMEM: per-SUBTILE absmax scale
+    tiles = acc.reshape(-1, SUBTILE)                    # (TILE/SUBTILE, SUBTILE)
+    scale = jnp.maximum(jnp.max(jnp.abs(tiles), axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(tiles / scale[:, None]), -127, 127)
+    q_ref[...] = q.reshape(1, -1).astype(jnp.int8)
+    s_ref[...] = scale[None]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _onepass_tiles(x, w, int_mask, *, tile: int, interpret: bool):
+    P, N = x.shape
+    grid = (N // tile,)
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((P, 1), lambda i: (0, 0)),
+            pl.BlockSpec((P, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, N), jnp.float32),
+        interpret=interpret,
+    )(w[:, None], x, int_mask[None])[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _onepass_quant_tiles(x, w, int_mask, *, tile: int, interpret: bool):
+    P, N = x.shape
+    grid = (N // tile,)
+    sub = tile // SUBTILE
+    mean, q, s = pl.pallas_call(
+        _agg_quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((P, 1), lambda i: (0, 0)),
+            pl.BlockSpec((P, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, sub), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, N), jnp.float32),
+            jax.ShapeDtypeStruct((1, N), jnp.int8),
+            jax.ShapeDtypeStruct((1, N // SUBTILE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w[:, None], x, int_mask[None])
+    return mean[0], q[0], s[0]
+
+
+def _pad_flat(x, int_mask, tile):
+    n = x.shape[-1]
+    pad = (-n) % tile
+    if pad:
+        x = jnp.pad(x, [(0, 0), (0, pad)])
+        int_mask = jnp.pad(int_mask, (0, pad))
+    return x, int_mask, n
+
+
+def aggregate_flat_onepass(x, w, int_mask=None, *, interpret: bool = False):
+    """x: (P, N) flat fp32 models; w: (P,). One kernel call → mean (N,).
+
+    ``int_mask`` marks integer-leaf positions (rounded in-kernel); None
+    means all-float.
+    """
+    P, N = x.shape
+    if int_mask is None:
+        int_mask = jnp.zeros((N,), jnp.float32)
+    tile = tile_for(N, P)
+    xp, mp, n = _pad_flat(x, jnp.asarray(int_mask, jnp.float32), tile)
+    return _onepass_tiles(xp, w, mp, tile=tile, interpret=interpret)[:n]
+
+
+def aggregate_quantize_flat(x, w, int_mask=None, *, interpret: bool = False):
+    """Fused aggregate→quantize: one kernel call → (mean (N,), codes int8
+    (N,), scales (ceil(N/SUBTILE),)).
+
+    Codes/scales match ``quantize_ref(mean)`` applied to the SUBTILE-padded
+    mean; the caller keeps ``N`` to slice codes back down.
+    """
+    P, N = x.shape
+    if int_mask is None:
+        int_mask = jnp.zeros((N,), jnp.float32)
+    tile = tile_for(N, P)
+    xp, mp, n = _pad_flat(x, jnp.asarray(int_mask, jnp.float32), tile)
+    mean, q, s = _onepass_quant_tiles(xp, w, mp, tile=tile, interpret=interpret)
+    return mean[:n], q[:n], s[: -(-n // SUBTILE)]

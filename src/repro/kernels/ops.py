@@ -12,8 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine.flat import FlatModel, FlatSpec, as_buffer
 from repro.kernels.aggregate import TILE, aggregate_tiles
+from repro.kernels.fused import (SUBTILE, aggregate_flat_onepass,
+                                 aggregate_quantize_flat)
 from repro.kernels.quantize import dequantize_tiles, quantize_tiles
+from repro.utils.pytree import check_aggregation_weights as _check_weights
 
 
 def _default_interpret() -> bool:
@@ -31,6 +35,7 @@ def _pad_to_tile(x_flat):
 def aggregate_flat(x, w, *, interpret=None):
     """x: (P, N) stacked flattened models; w: (P,). Weighted mean (N,)."""
     interpret = _default_interpret() if interpret is None else interpret
+    _check_weights(w)
     xp, n = _pad_to_tile(x)
     return aggregate_tiles(xp, w, interpret=interpret)[:n]
 
@@ -38,10 +43,12 @@ def aggregate_flat(x, w, *, interpret=None):
 def aggregate_pytree(models, weights, *, interpret=None):
     """MoDeST aggregation over a list of model pytrees via the kernel.
 
-    Drop-in replacement for ``tree_weighted_mean`` (the protocol core's
-    reference path); used by the node when kernel aggregation is enabled.
+    Per-leaf path: one ``pallas_call`` per pytree leaf. Kept as the
+    reference kernel path and for the engine's speedup benchmarks; the
+    hot loop uses :func:`aggregate_flatmodel` (one call per model).
     """
     interpret = _default_interpret() if interpret is None else interpret
+    _check_weights(weights)
     w = jnp.asarray(weights, jnp.float32)
 
     def leaf(*xs):
@@ -60,6 +67,97 @@ def aggregate_pytree(models, weights, *, interpret=None):
         return out.astype(dt)
 
     return jax.tree.map(leaf, *models)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model one-pass aggregation (FlatModel engine)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def _jnp_onepass(spec_n: int, has_int: bool):
+    def agg(x, w, int_mask):
+        total = jnp.sum(w)
+        mean = jnp.tensordot(w, x, axes=(0, 0)) / total
+        if has_int:
+            mean = jnp.where(int_mask, jnp.round(mean), mean)
+        return mean
+
+    return jax.jit(agg)
+
+
+@functools.lru_cache(maxsize=64)
+def _jnp_onepass_quant(spec_n: int, has_int: bool):
+    """Fused aggregate→quantize, XLA-fused single jit (CPU default).
+
+    Same contraction + per-SUBTILE quantization as the Pallas kernel;
+    codes/scales are bit-identical to ``quantize_ref`` of the padded mean.
+    """
+    from repro.kernels.fused import SUBTILE
+
+    pad = (-spec_n) % SUBTILE
+
+    def agg(x, w, int_mask):
+        total = jnp.sum(w)
+        mean = jnp.tensordot(w, x, axes=(0, 0)) / total
+        if has_int:
+            mean = jnp.where(int_mask, jnp.round(mean), mean)
+        t = jnp.pad(mean, (0, pad)).reshape(-1, SUBTILE)
+        scales = jnp.maximum(jnp.max(jnp.abs(t), axis=1), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(t / scales[:, None]), -127, 127)
+        return mean, q.reshape(-1)[:spec_n].astype(jnp.int8), scales
+
+    return jax.jit(agg)
+
+
+def aggregate_flatmodel(models, weights=None, *, spec=None, quantize=False,
+                        interpret=None, use_kernel=None):
+    """Whole-model one-pass aggregation over FlatModels (or pytrees).
+
+    ``models``: list of :class:`~repro.engine.flat.FlatModel` and/or
+    pytrees (mixed is fine — trees are packed against ``spec``, derived
+    from the first model when omitted). Returns a FlatModel; with
+    ``quantize=True`` returns ``(FlatModel, codes int8 (n,), scales)``
+    from the fused aggregate→quantize kernel — no extra HBM round trip.
+
+    ``use_kernel``: force the Pallas path (True) or the jnp one-pass
+    contraction (False). Default: Pallas on TPU, jnp elsewhere — on CPU
+    the interpret-mode kernel exists for validation, not speed. Both paths
+    are a single fused pass over the ``(P, N)`` stack either way.
+    """
+    if weights is None:
+        weights = [1.0] * len(models)
+    _check_weights(weights)
+    if spec is None:
+        first = models[0]
+        spec = first.spec if isinstance(first, FlatModel) else \
+            FlatSpec.from_tree(first)
+    x = jnp.stack([as_buffer(m, spec) for m in models])
+    w = jnp.asarray(weights, jnp.float32)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    interpret = _default_interpret() if interpret is None else interpret
+    int_mask = jnp.asarray(spec.int_mask) if spec.has_int else None
+    if quantize:
+        if use_kernel:
+            mask = (int_mask.astype(jnp.float32) if int_mask is not None
+                    else jnp.zeros((spec.n,), jnp.float32))
+            mean, codes, scales = aggregate_quantize_flat(
+                x, w, mask, interpret=interpret)
+        else:
+            mask = int_mask if int_mask is not None \
+                else jnp.zeros((), jnp.bool_)
+            mean, codes, scales = _jnp_onepass_quant(
+                spec.n, spec.has_int)(x, w, mask)
+        return FlatModel(mean, spec), codes, scales
+    if use_kernel:
+        mask = (int_mask.astype(jnp.float32) if int_mask is not None
+                else jnp.zeros((spec.n,), jnp.float32))
+        mean = aggregate_flat_onepass(x, w, mask, interpret=interpret)
+    else:
+        mask = int_mask if int_mask is not None else jnp.zeros((), jnp.bool_)
+        mean = _jnp_onepass(spec.n, spec.has_int)(x, w, mask)
+    return FlatModel(mean, spec)
 
 
 def quantize_flat(x, *, interpret=None):

@@ -31,7 +31,7 @@ def init(key, cfg):
 
 def _conv(x, w, b):
     y = jax.lax.conv_general_dilated(
-        x, w, window_strides=(1, 1), padding="SAME",
+        x.astype(w.dtype), w, window_strides=(1, 1), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     return jax.nn.relu(y + b[None, None, None, :])
 
@@ -55,6 +55,13 @@ def apply(params, cfg, x):
 def loss_fn(params, cfg, batch):
     logits = apply(params, cfg, batch["x"])
     labels = batch["y"].astype(jnp.int32)
-    loss = L.softmax_xent(logits[:, None, :], labels[:, None])
-    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    mask = batch.get("mask")                   # per-row; padded rows drop out
+    loss = L.softmax_xent(logits[:, None, :], labels[:, None],
+                          mask if mask is None else mask[:, None])
+    hit = (jnp.argmax(logits, -1) == labels).astype(jnp.float32)
+    if mask is None:
+        acc = jnp.mean(hit)
+    else:
+        m = mask.astype(jnp.float32)
+        acc = jnp.sum(hit * m) / jnp.maximum(jnp.sum(m), 1.0)
     return loss, {"loss": loss, "accuracy": acc}

@@ -33,9 +33,17 @@ def predict(params, pairs):
 
 def loss_fn(params, cfg, batch):
     pred = predict(params, batch["x"])
-    err = pred - batch["y"]
-    mse = jnp.mean(jnp.square(err))
+    err = jnp.square(pred - batch["y"])
     u, i = batch["x"][:, 0], batch["x"][:, 1]
-    reg = L2 * (jnp.mean(jnp.sum(jnp.square(params["users"][u]), -1))
-                + jnp.mean(jnp.sum(jnp.square(params["items"][i]), -1)))
+    reg_u = jnp.sum(jnp.square(params["users"][u]), -1)
+    reg_i = jnp.sum(jnp.square(params["items"][i]), -1)
+    mask = batch.get("mask")                   # per-row; padded rows drop out
+    if mask is None:
+        mse = jnp.mean(err)
+        reg = L2 * (jnp.mean(reg_u) + jnp.mean(reg_i))
+    else:
+        m = mask.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+        mse = jnp.sum(err * m) / denom
+        reg = L2 * (jnp.sum(reg_u * m) + jnp.sum(reg_i * m)) / denom
     return mse + reg, {"loss": mse, "mse": mse}

@@ -8,7 +8,7 @@ Each task jits one SGD step once and reuses it across all simulated nodes
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -18,11 +18,22 @@ from repro import optim
 from repro.config import ModelConfig, TrainConfig
 from repro.core.tasks import LearningTask
 from repro.data.loader import ClientDataset
+from repro.engine.flat import FlatModel, FlatSpec, as_tree
 from repro.models import build
 
 
 class JaxTask(LearningTask):
-    """Generic task: model family chosen by cfg.family."""
+    """Generic task: model family chosen by cfg.family.
+
+    Carries the FlatModel surface of the compute engine: a per-task
+    :class:`~repro.engine.flat.FlatSpec` (computed once), FlatModel-aware
+    ``local_train``/``evaluate``/``aggregate`` (trees are accepted
+    everywhere; FlatModels skip the pack), and vmapped many-model
+    evaluation. Aggregation runs the whole-model one-pass path and
+    returns a FlatModel so consecutive rounds never rebuild pytrees.
+    """
+
+    supports_cohort = True
 
     def __init__(self, cfg: ModelConfig, tcfg: TrainConfig):
         self.cfg = cfg
@@ -31,6 +42,7 @@ class JaxTask(LearningTask):
         self.name = cfg.name
         opt = optim.build(tcfg)
         self._opt = opt
+        self._flat_spec: Optional[FlatSpec] = None
 
         def step(params, opt_state, batch):
             (loss, _metrics), grads = jax.value_and_grad(
@@ -40,15 +52,53 @@ class JaxTask(LearningTask):
 
         self._step = jax.jit(step)
         self._eval = jax.jit(lambda p, b: self.model.loss_fn(p, b)[1])
+        from repro.engine.lowering import eval_metrics_for
+        self._eval_many = jax.jit(jax.vmap(eval_metrics_for(self),
+                                           in_axes=(0, None)))
+
+    @property
+    def flat_spec(self) -> FlatSpec:
+        """Flat-buffer layout of this task's parameter pytree (computed
+        once, from abstract shapes — no params materialized)."""
+        if self._flat_spec is None:
+            tree = jax.eval_shape(self.model.init, jax.random.key(0))
+            self._flat_spec = FlatSpec.from_tree(tree)
+        return self._flat_spec
 
     # -- batch adaptation per family ------------------------------------------
 
-    def _to_batch(self, x, y) -> dict:
-        if self.cfg.family in ("cnn",):
-            return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
-        if self.cfg.family in ("mf",):
-            return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
-        return {"tokens": jnp.asarray(x), "labels": jnp.asarray(y)}
+    def _to_batch(self, x, y, mask=None) -> dict:
+        if self.cfg.family in ("cnn", "mf"):
+            b = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+            if mask is not None:
+                b["mask"] = jnp.asarray(mask)
+            return b
+        b = {"tokens": jnp.asarray(x), "labels": jnp.asarray(y)}
+        if mask is not None:
+            # token families mask per position; a row mask broadcasts
+            b["mask"] = jnp.broadcast_to(jnp.asarray(mask)[:, None],
+                                         b["tokens"].shape)
+        return b
+
+    def _padded_batches(self, client: ClientDataset, batch_size: int, *,
+                        seed: int = 0, epochs: int = 1):
+        """[(x, y, mask)] with every batch padded to ``batch_size``.
+
+        Padded rows repeat real samples but carry mask 0, so they
+        contribute exactly zero gradient — unlike the pre-PR-4 tail
+        handling, which *replicated* samples into the batch and silently
+        upweighted them. Shapes are constant, so the step traces once.
+        """
+        out = []
+        for x, y in client.batches(batch_size, seed=seed, epochs=epochs):
+            mask = np.ones(batch_size, np.float32)
+            if len(x) < batch_size:
+                reps = -(-batch_size // len(x))
+                mask[len(x):] = 0.0
+                x = np.concatenate([x] * reps)[:batch_size]
+                y = np.concatenate([y] * reps)[:batch_size]
+            out.append((x, y, mask))
+        return out
 
     # -- LearningTask interface ---------------------------------------------
 
@@ -57,24 +107,15 @@ class JaxTask(LearningTask):
 
     def local_train(self, params, client: ClientDataset, *, batch_size: int,
                     epochs: int = 1, seed: int = 0, lr_scale: float = 1.0):
-        n_full = 0
+        params = as_tree(params)                # boundary: FlatModel -> tree
         opt_state = self._opt.init(params)      # fresh per round (paper: SGD)
-        for x, y in client.batches(batch_size, seed=seed, epochs=epochs):
-            if len(x) < batch_size:
-                if n_full:
-                    continue                    # drop ragged tail (no retrace)
-                reps = -(-batch_size // len(x))
-                x = np.concatenate([x] * reps)[:batch_size]
-                y = np.concatenate([y] * reps)[:batch_size]
+        for x, y, mask in self._padded_batches(client, batch_size,
+                                               seed=seed, epochs=epochs):
             params, opt_state, _ = self._step(params, opt_state,
-                                              self._to_batch(x, y))
-            n_full += 1
+                                              self._to_batch(x, y, mask))
         return params
 
-    def evaluate(self, params, test: ClientDataset) -> dict:
-        bs = 64
-        agg: dict = {}
-        n = 0
+    def _eval_batches(self, test: ClientDataset, bs: int = 64):
         for lo in range(0, len(test), bs):
             x, y = test.x[lo:lo + bs], test.y[lo:lo + bs]
             if len(x) < bs:
@@ -84,11 +125,59 @@ class JaxTask(LearningTask):
                 y = np.concatenate([y, y[:1].repeat(pad, 0)])
             else:
                 w = bs
+            yield x, y, w
+
+    def evaluate(self, params, test: ClientDataset) -> dict:
+        params = as_tree(params)
+        agg: dict = {}
+        n = 0
+        for x, y, w in self._eval_batches(test):
             m = self._eval(params, self._to_batch(x, y))
             for k, v in m.items():
                 agg[k] = agg.get(k, 0.0) + float(v) * w
             n += w
         return {k: v / n for k, v in agg.items()}
+
+    def evaluate_many(self, models: Sequence, test: ClientDataset):
+        """Evaluate many models in one vmapped sweep per test batch.
+
+        Same batch slicing/padding/weighting as :meth:`evaluate`, so the
+        numbers match the sequential path; the models axis is vmapped
+        (sessions evaluate their collected round snapshots this way).
+        """
+        if not models:
+            return []
+        spec = self.flat_spec
+        stacked = spec.unpack_stacked(jnp.stack(
+            [m.buffer if isinstance(m, FlatModel) else spec.pack(m)
+             for m in models]))
+        aggs = [dict() for _ in models]
+        n = 0
+        for x, y, w in self._eval_batches(test):
+            ms = self._eval_many(stacked, self._to_batch(x, y))
+            for k, v in ms.items():
+                v_np = np.asarray(v)           # one host sync per metric
+                for i in range(len(models)):
+                    aggs[i][k] = aggs[i].get(k, 0.0) + float(v_np[i]) * w
+            n += w
+        return [{k: v / n for k, v in a.items()} for a in aggs]
+
+    def aggregate(self, models: Sequence,
+                  weights: Optional[Sequence[float]] = None):
+        """AVG(Θ) via the whole-model one-pass path; returns a FlatModel
+        (unflattened lazily at task boundaries). Inputs may be FlatModels
+        or pytrees (mixed is fine)."""
+        from repro.kernels.ops import aggregate_flatmodel
+        return aggregate_flatmodel(list(models), weights,
+                                   spec=self.flat_spec)
+
+    def aggregate_sequential(self, models: Sequence,
+                             weights: Optional[Sequence[float]] = None):
+        """Legacy per-leaf reference aggregation over pytrees."""
+        return super().aggregate([as_tree(m) for m in models], weights)
+
+    def model_bytes(self, params=None) -> int:
+        return self.flat_spec.nbytes
 
 
 def cnn_task(tcfg: Optional[TrainConfig] = None, **cfg_overrides) -> JaxTask:

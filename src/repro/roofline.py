@@ -35,6 +35,34 @@ from repro.models import build
 ACT_ALPHA = 8.0          # activation HBM traffic multiplier (fwd w+r, remat, bwd)
 
 
+def aggregation_roofline(n_params: int, p: int, *, itemsize: int = 4,
+                         fused_quantize: bool = False, chips: int = 1) -> dict:
+    """HBM-traffic model of the MoDeST aggregation step (the engine's
+    one-pass whole-model kernel vs the per-leaf path).
+
+    One pass reads the ``(P, N)`` stack once and writes the mean once:
+    ``(P+1)·N·itemsize`` bytes. The per-leaf path moves the same payload
+    but adds a ravel/stack round trip per leaf (read + write of every
+    replica's leaf), modeled as ``2×`` the stack bytes on top. The fused aggregate→quantize variant
+    appends int8 codes + fp32 scales to the single pass instead of
+    re-reading the mean in a second kernel (which would cost
+    ``(1+1/4)·N·itemsize`` more).
+    """
+    stack = (p + 1) * n_params * itemsize
+    onepass = stack + (n_params + 4 * (n_params // 16384 + 1)
+                       if fused_quantize else 0)
+    per_leaf = stack + 2 * p * n_params * itemsize
+    if fused_quantize:
+        per_leaf += 2 * n_params * itemsize + n_params   # extra quant pass
+    bw = chips * V5E.hbm_bandwidth
+    return {
+        "onepass_bytes": int(onepass),
+        "per_leaf_bytes": int(per_leaf),
+        "onepass_tpu_us": round(onepass / bw * 1e6, 2),
+        "per_leaf_tpu_us": round(per_leaf / bw * 1e6, 2),
+    }
+
+
 def _param_leaves(cfg: ModelConfig):
     model = build(cfg)
     tree = jax.eval_shape(model.init, jax.random.key(0))

@@ -25,6 +25,7 @@ from repro.core.node import ModestNode
 from repro.core.registry import JOINED, Registry
 from repro.core.tasks import AbstractTask, LearningTask
 from repro.data.loader import FederatedData
+from repro.engine.cohort import make_engine
 from repro.sim.churn import AvailabilityDriver
 from repro.sim.clock import Simulator
 from repro.sim.network import Network
@@ -109,6 +110,13 @@ class ModestSession:
     crashing when their availability trace goes offline and rejoining via
     Alg. 2 when it comes back. With a profile, ``n_nodes``/``mcfg``/
     ``tcfg``/``task`` become optional (sized from the profile).
+
+    ``engine`` selects the compute path: ``"batched"`` (one vmapped
+    flat-model batch per sampled cohort — default for tasks that support
+    it, i.e. :class:`~repro.models.tasks.JaxTask`), ``"sequential"``
+    (per-node reference path), or None for auto. Event semantics are
+    identical either way — per-node train durations still come from the
+    cost model; only wall-clock changes (docs/ENGINE.md).
     """
 
     def __init__(self, *, n_nodes: Optional[int] = None,
@@ -120,7 +128,8 @@ class ModestSession:
                  eval_every_rounds: int = 10,
                  fixed_aggregator: bool = False,
                  profile=None, churn_from_profile: bool = True,
-                 contention: bool = True):
+                 contention: bool = True,
+                 engine: Optional[str] = None):
         n_nodes, task = _profile_defaults(profile, n_nodes, task,
                                           extra_required=(("mcfg", mcfg),))
         # Churny regimes need sf < 1 to keep rounds moving when sampled
@@ -132,6 +141,7 @@ class ModestSession:
         self.net, speeds = _net_and_speeds(self.sim, n_nodes, profile,
                                            bandwidth, seed, contention)
         self.mcfg, self.tcfg, self.task = mcfg, tcfg, task
+        self.engine = make_engine(engine, task)
         self.eval_every = eval_every_rounds
         self.data = data
         self.result = SessionResult()
@@ -178,7 +188,8 @@ class ModestSession:
                 data=data.clients[i % len(data.clients)] if data else None,
                 train_speed=float(speeds[i]),
                 on_aggregate=self._on_aggregate,
-                fixed_aggregator=fixed_id)
+                fixed_aggregator=fixed_id,
+                engine=self.engine)
             node.bootstrap(ids, base=(base_reg, base_act))
             self.nodes[nid] = node
         for nid in offline_now:
@@ -253,6 +264,8 @@ class ModestSession:
         node = self.nodes.get(nid)
         if node is not None:
             node.crash()
+            # stop the engine from plan-ahead-training an offline node
+            self.engine.register_client(nid, None)
 
     def _trace_online(self, nid: str) -> None:
         """Trace came back: recover and rejoin through Alg. 2 — the node
@@ -261,6 +274,8 @@ class ModestSession:
         if node is None or node.online:
             return
         node.recover()
+        if node.data is not None:
+            self.engine.register_client(nid, node.data)
         peers = [j for j in self.nodes if j != nid]
         if peers:
             k = min(self.mcfg.sample_size, len(peers))
@@ -274,7 +289,8 @@ class ModestSession:
                 node_id, self.sim, self.net, self.mcfg, self.tcfg, self.task,
                 data=self.data.clients[data_idx % len(self.data.clients)]
                 if self.data else None,
-                train_speed=0.05, on_aggregate=self._on_aggregate)
+                train_speed=0.05, on_aggregate=self._on_aggregate,
+                engine=self.engine)
             # A joiner knows only its bootstrap peers (Alg. 2 Require).
             peers = list(np.random.default_rng(len(node_id)).choice(
                 [n for n in self.nodes], size=min(self.mcfg.sample_size,
@@ -306,12 +322,15 @@ class ModestSession:
         if self.churn_driver is not None:
             self.result.churn_events = self.churn_driver.events_fired
         # Evaluate collected models (lazily, once, at the end — evaluation
-        # does not consume simulated time, matching §4.2).
+        # does not consume simulated time, matching §4.2). One vmapped
+        # sweep over all snapshots for tasks that support it.
         if self.data is not None and self.data.test is not None:
-            for (t, k) in self.result.round_times:
-                if k in self._eval_models:
-                    m = self.task.evaluate(self._eval_models[k], self.data.test)
-                    self.result.history.append({"t": t, "round": k, **m})
+            pending = [(t, k) for (t, k) in self.result.round_times
+                       if k in self._eval_models]
+            metrics = self.engine.evaluate_models(
+                [self._eval_models[k] for _, k in pending], self.data.test)
+            for (t, k), m in zip(pending, metrics):
+                self.result.history.append({"t": t, "round": k, **m})
         self.result.history.sort(key=lambda h: h["t"])
         self.result.usage = self.net.usage_summary()
         self.result.overhead_fraction = self.net.overhead_fraction()
@@ -359,6 +378,14 @@ class _DSGDNode:
             epochs=1, speed=self.speed)
         self._train_started_at = self.sim.now
         self._train_dur = dur
+        if self.params is not None and self.data is not None:
+            # params are final for this round (aggregation happened in
+            # maybe_advance), so the engine may batch the compute with
+            # whichever peers start their round before our finish fires.
+            self.session.engine.submit(
+                self.node_id, self.round, self.params, self.data,
+                batch_size=self.session.tcfg.batch_size, epochs=1,
+                seed=self.round)
         self.sim.schedule(dur, self.finish_train)
 
     def finish_train(self):
@@ -372,9 +399,9 @@ class _DSGDNode:
             return
         self.train_seconds += self._train_dur
         self.trainings_completed += 1
-        if self.params is not None:
-            self.params = self.session.task.local_train(
-                self.params, self.data,
+        if self.params is not None and self.data is not None:
+            self.params = self.session.engine.result(
+                self.node_id, self.round, self.params, self.data,
                 batch_size=self.session.tcfg.batch_size,
                 epochs=1, seed=self.round)
         self.trained = True
@@ -399,7 +426,7 @@ class _DSGDNode:
         if self.trained and self.inbox.get(self.round):
             incoming = self.inbox.pop(self.round)
             if self.params is not None:
-                self.params = self.session.task.aggregate(
+                self.params = self.session.engine.aggregate(
                     [self.params] + [m.params for m in incoming])
             self.round += 1
             self.session.on_round(self.node_id, self.round, self.params)
@@ -421,13 +448,14 @@ class DSGDSession:
                  data: Optional[FederatedData] = None, bandwidth: float = 20e6,
                  seed: int = 0, eval_every_rounds: int = 10,
                  profile=None, churn_from_profile: bool = True,
-                 contention: bool = True):
+                 contention: bool = True, engine: Optional[str] = None):
         n_nodes, task = _profile_defaults(profile, n_nodes, task)
         tcfg = tcfg or TrainConfig()
         self.sim = Simulator()
         self.net, speeds = _net_and_speeds(self.sim, n_nodes, profile,
                                            bandwidth, seed, contention)
         self.tcfg, self.task = tcfg, task
+        self.engine = make_engine(engine, task)
         self.eval_every = eval_every_rounds
         self.data = data
         self.result = SessionResult()
@@ -481,7 +509,8 @@ class DSGDSession:
             self.result.churn_events = self.churn_driver.events_fired
         if self.data is not None and self.data.test is not None:
             for k, snaps in sorted(self._snapshots.items()):
-                metrics = [self.task.evaluate(p, self.data.test) for _, p in snaps]
+                metrics = self.engine.evaluate_models([p for _, p in snaps],
+                                                      self.data.test)
                 t = max(t for t, _ in snaps)
                 mean = {key: float(np.mean([m[key] for m in metrics]))
                         for key in metrics[0]}
@@ -548,9 +577,12 @@ class _GossipNode:
                 return
             self.train_seconds += dur
             self.trainings_completed += 1
-            if self.params is not None:
-                self.params = self.session.task.local_train(
-                    self.params, self.data,
+            if self.params is not None and self.data is not None:
+                # Gossip can't pre-submit: receive() may fold a pushed
+                # model into self.params mid-training. The engine call
+                # still routes through the fast fused lowering (S = 1).
+                self.params = self.session.engine.result(
+                    self.node_id, self.cycles, self.params, self.data,
                     batch_size=self.session.tcfg.batch_size,
                     epochs=1, seed=self.cycles)
             self.cycles += 1
@@ -582,7 +614,7 @@ class _GossipNode:
     def receive(self, msg):
         if isinstance(msg, M.AggregateMsg) and msg.model.params is not None:
             if self.params is not None:
-                self.params = self.session.task.aggregate(
+                self.params = self.session.engine.aggregate(
                     [self.params, msg.model.params])
 
 
@@ -597,13 +629,15 @@ class GossipSession:
                  data: Optional[FederatedData] = None, bandwidth: float = 20e6,
                  seed: int = 0, eval_every_rounds: int = 10,
                  period: float = 5.0, profile=None,
-                 churn_from_profile: bool = True, contention: bool = True):
+                 churn_from_profile: bool = True, contention: bool = True,
+                 engine: Optional[str] = None):
         n_nodes, task = _profile_defaults(profile, n_nodes, task)
         tcfg = tcfg or TrainConfig()
         self.sim = Simulator()
         self.net, speeds = _net_and_speeds(self.sim, n_nodes, profile,
                                            bandwidth, seed, contention)
         self.tcfg, self.task = tcfg, task
+        self.engine = make_engine(engine, task)
         self.eval_every = eval_every_rounds
         self.data = data
         self.rng = np.random.default_rng(seed)
@@ -658,8 +692,10 @@ class GossipSession:
         if self.churn_driver is not None:
             self.result.churn_events = self.churn_driver.events_fired
         if self.data is not None and self.data.test is not None:
-            for k, (t, p) in sorted(self._snapshots.items()):
-                m = self.task.evaluate(p, self.data.test)
+            snaps = sorted(self._snapshots.items())
+            metrics = self.engine.evaluate_models([p for _, (_, p) in snaps],
+                                                  self.data.test)
+            for (k, (t, _p)), m in zip(snaps, metrics):
                 self.result.history.append({"t": t, "round": k, **m})
         self.result.usage = self.net.usage_summary()
         self.result.overhead_fraction = self.net.overhead_fraction()

@@ -31,15 +31,37 @@ def tree_axpy(alpha, x, y):
     return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
 
 
+def check_aggregation_weights(weights) -> None:
+    """Shared zero-weight guard for every aggregation path (see
+    :func:`tree_weighted_mean` for the contract). Traced weights (inside
+    jit) cannot be validated here and pass through."""
+    if isinstance(weights, jax.core.Tracer):
+        return
+    total = float(np.sum(np.asarray(weights, np.float32)))
+    if total <= 0.0:
+        raise ValueError(f"aggregation weights sum to {total}; "
+                         "weighted mean requires a positive total")
+
+
 def tree_weighted_mean(trees, weights):
     """Weighted mean of a list of pytrees.
 
     This is the *reference* aggregation used by the protocol core; the
     mesh path uses a masked mean over the participant axis and the Pallas
-    kernel in ``repro.kernels.aggregate`` implements the same contraction.
+    kernels (``repro.kernels.aggregate`` per-leaf,
+    ``repro.kernels.fused`` whole-model one-pass) implement the same
+    contraction.
 
-    ``weights`` need not be normalized; zero-total weight raises.
+    **Zero-weight contract** (single source of truth, shared by every
+    aggregation path — this function, ``aggregate_pytree``,
+    ``aggregate_flat`` and ``aggregate_flatmodel``): ``weights`` need not
+    be normalized, but a non-positive total is a caller error and raises
+    ``ValueError``. The kernels used to clamp the total to 1e-9 while
+    this docstring promised a raise; both now raise. Traced weights
+    (inside jit) cannot be validated here — in that case validation is
+    the caller's responsibility and a zero total yields NaN.
     """
+    check_aggregation_weights(weights)
     w = jnp.asarray(weights, dtype=jnp.float32)
     total = jnp.sum(w)
 
@@ -65,7 +87,14 @@ def tree_num_params(tree) -> int:
 
 
 def tree_size_bytes(tree) -> int:
-    """Total byte size of a pytree of (abstract or concrete) arrays."""
+    """Total byte size of a pytree of (abstract or concrete) arrays.
+
+    A :class:`~repro.engine.flat.FlatModel` reports the byte size of the
+    pytree it encodes (original per-leaf dtypes), not of its fp32 working
+    buffer — wire accounting is representation-independent.
+    """
+    if hasattr(tree, "wire_bytes"):            # FlatModel (duck-typed: no
+        return int(tree.wire_bytes)            # engine import in utils)
     total = 0
     for x in jax.tree.leaves(tree):
         total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
