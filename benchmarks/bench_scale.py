@@ -26,11 +26,12 @@ import math
 import numpy as np
 
 from benchmarks.common import emit, out_path, timer
-from repro.eval import scenario_matrix
+from repro.eval import FAULT_REGIMES, scenario_matrix
 from repro.sim.runner import ModestSession
 from repro.traces import diurnal_profile
 
 SCALE_NODES = (100, 400, 1000)
+FAULT_NODES = 400
 
 
 def run_scale(quick: bool = True):
@@ -63,6 +64,48 @@ def run_scale(quick: bool = True):
     return rows, round(exponent, 3)
 
 
+def run_fault_overhead(quick: bool = True):
+    """Scheduler overhead of fault injection: the same diurnal MoDeST
+    session clean vs under a steady lossy-WAN schedule (10% drop +
+    jitter + 5% duplication — the ``lossy_wan`` eval regime). The ratio
+    tracks what the per-send ``transit()`` interception and the extra
+    duplicate/retry events cost in events/sec; the clean row doubles as
+    a regression canary for the zero-cost-by-default contract (its
+    wall-clock should track the ``scale`` row at the same n)."""
+    duration = 120.0 if quick else 600.0
+    repeats = 3                 # best-of: single runs are timer-noise bound
+    rows = []
+    for fault_name, sched in (
+            ("clean", None),
+            # the eval regime itself, not a copy — so this row always
+            # measures exactly what the scenario matrix injects
+            ("lossy_wan", FAULT_REGIMES["lossy_wan"](0, duration,
+                                                     FAULT_NODES))):
+        best = None
+        for _ in range(repeats):
+            with timer() as t:
+                sess = ModestSession(
+                    profile=diurnal_profile(n=FAULT_NODES, seed=0),
+                    contention=True, fault=sched)
+                res = sess.run(duration)
+            if best is None or t.seconds < best[0]:
+                best = (t.seconds, sess, res)
+        wall, sess, res = best
+        rows.append({
+            "table": "fault_overhead", "nodes": FAULT_NODES,
+            "fault": fault_name, "duration_s": duration,
+            "rounds": res.rounds_completed,
+            "sim_events": sess.sim.events_processed,
+            "injections": int(sum(res.fault_stats.values())),
+            "wall_s": round(wall, 3),
+            "events_per_s": int(sess.sim.events_processed / max(wall, 1e-9)),
+        })
+    overhead = rows[1]["wall_s"] / max(rows[0]["wall_s"], 1e-9)
+    print(f"fault-injection wall overhead at n={FAULT_NODES}: "
+          f"{overhead:.2f}x ({rows[1]['injections']} injections)")
+    return rows, round(overhead, 3)
+
+
 def run_matrix(quick: bool = True):
     """The repro.eval scenario matrix (all four algos × four regimes)."""
     out = scenario_matrix(
@@ -88,11 +131,14 @@ def _finite(obj):
 
 def run(quick: bool = True):
     scale_rows, exponent = run_scale(quick=quick)
+    fault_rows, fault_overhead = run_fault_overhead(quick=quick)
     matrix = run_matrix(quick=quick)
     artifact = _finite({
         "quick": quick,
         "scale": scale_rows,
         "wall_clock_exponent": exponent,
+        "fault_overhead": fault_rows,
+        "fault_overhead_x": fault_overhead,
         "scenario_matrix": {"summary": matrix["summary"],
                             "ratios": matrix["ratios"]},
     })

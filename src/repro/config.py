@@ -163,6 +163,14 @@ class ModestConfig:
     activity_window: int = 20        # Δk (rounds)
     local_steps: int = 1             # E — local passes before push (FedAvg E)
     seed: int = 0
+    # Trainer-side aggregator failover (§4 failover story): if round k+1
+    # shows no progress after a trainer pushed its model, it re-samples
+    # A^{k+1} (excluding the aggregators already tried) and re-sends.
+    # "auto" enables it exactly when a fault fabric is attached — clean
+    # sessions keep the golden-pinned trajectories byte-identical, while
+    # every fault-injected run exercises the hardened path. True/False
+    # force it on/off regardless.
+    failover: object = "auto"        # "auto" | True | False
 
 
 @dataclass(frozen=True)

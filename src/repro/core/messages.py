@@ -41,6 +41,20 @@ class Pong(Message):
 
 
 @dataclass
+class Ack(Message):
+    """Aggregator -> trainer: your round-k model arrived. Only emitted
+    when failover is enabled (``ModestConfig.failover``): it exists to
+    cancel the trainer's failover watch, so healthy pushes don't trigger
+    spurious re-sends just because the trainer wasn't sampled into the
+    next round and never observed its progress."""
+
+    round_k: int = 0
+
+    def size_bytes(self) -> int:
+        return HEADER_BYTES
+
+
+@dataclass
 class Joined(Message):
     node: str = ""
     counter: int = 0

@@ -66,6 +66,12 @@ class ModestNode:
         self.k_agg = 0
         self.k_train = 0
         self._theta_list: List = []            # Θ
+        self._theta_from: List[str] = []       # sender of each model in Θ
+        self._seen_round = 0                   # max round in any model msg
+        self.agg_log: List[tuple] = []         # (k, senders) per aggregation
+        self.dup_models_dropped = 0            # duplicate AggregateMsg guard
+        self.failovers = 0                     # aggregator-failover re-sends
+        self._push_acked = set()               # rounds with a model Ack
         self._agg_models_done = set()          # rounds already aggregated (guard)
         self._train_done = set()               # rounds already trained (guard)
         self._train_handle = None              # cancellable pending training
@@ -199,6 +205,8 @@ class ModestNode:
                           M.Pong(sender=self.node_id, round_k=msg.round_k))
         elif isinstance(msg, M.Pong):
             self.sampler.on_pong(msg.round_k, msg.sender)
+        elif isinstance(msg, M.Ack):
+            self._push_acked.add(msg.round_k)
         elif isinstance(msg, M.Joined):
             applied = self.registry.update(msg.node, msg.counter, JOINED)
             if applied:
@@ -213,16 +221,24 @@ class ModestNode:
     # ------------------------------------------------------------- aggregation
 
     def _on_aggregate_msg(self, msg: M.AggregateMsg) -> None:
+        if self.failover_enabled():
+            # Receipt ack (even for stale/duplicate copies): "this model
+            # is in live hands, don't failover-re-send it". Gated with
+            # the failover machinery so clean trajectories are untouched.
+            self.net.send(self.node_id, msg.sender,
+                          M.Ack(sender=self.node_id, round_k=msg.round_k))
         if msg.view is not None:
             msg.view.merge_into(self.registry, self.activity)
         self.activity.update(self.node_id, msg.round_k)
         self._note_active(msg.round_k)
+        self._seen_round = max(self._seen_round, msg.round_k)
         k = msg.round_k
         if k < self.k_agg or k in self._agg_models_done:
             return                                         # stale (§3.6)
         if k > self.k_agg:
             self.k_agg = k
             self._theta_list = [msg.model]
+            self._theta_from = [msg.sender]
             # Liveness guard (implementation detail, mirrors sf's purpose):
             # if participants crash *after* being sampled, fewer than sf·s
             # models ever arrive; aggregate what we have after a long stall
@@ -232,7 +248,15 @@ class ModestNode:
             self._stall_handle = self.sim.schedule(
                 30 * self.timeout, lambda: self._stall_aggregate(k))
         else:
+            if msg.sender in self._theta_from:
+                # Duplicated delivery (spurious retransmit) or a trainer's
+                # failover re-send racing the original: one model per
+                # sender per round, or the average silently double-weights
+                # whoever's packets duplicated.
+                self.dup_models_dropped += 1
+                return
             self._theta_list.append(msg.model)
+            self._theta_from.append(msg.sender)
         if len(self._theta_list) >= self._sf_threshold():
             self._do_aggregate(k)
 
@@ -251,7 +275,12 @@ class ModestNode:
             self._stall_handle.cancel()
             self._stall_handle = None
         models = self._theta_list
+        # Audit trail for the conformance invariant "no model aggregated
+        # twice per round": one entry per aggregation this node performed,
+        # bounded by rounds x aggregators.
+        self.agg_log.append((k, tuple(self._theta_from)))
         self._theta_list = []
+        self._theta_from = []
         if models and models[0].params is not None:
             agg = self.engine.aggregate([m.params for m in models])
             payload = M.ModelPayload(params=agg)
@@ -263,8 +292,21 @@ class ModestNode:
 
         t0 = self.sim.now
 
-        def send_train(sample: List[str]) -> None:
+        def send_train(sample: List[str], _tries: int = 0) -> None:
             if not self.online:                # crashed while sampling
+                return
+            if not sample and _tries < 5 and self.failover_enabled():
+                # Every candidate was unreachable (mass crash, partition,
+                # total ping loss): an empty S^k is a guaranteed wedge —
+                # the aggregated model exists but nobody will ever train
+                # it. Hold the model and re-sample once the network has
+                # had a timeout to heal. Gated with the rest of the
+                # failover hardening: empty resolutions do occur in clean
+                # churny runs, and retrying there would shift the
+                # golden-pinned trajectories.
+                self.sim.schedule(self.timeout, lambda: self.sampler.sample(
+                    k, self.mcfg.sample_size,
+                    lambda s: send_train(s, _tries + 1)))
                 return
             self.sample_durations.append((t0, self.sim.now - t0))
             if payload.params is not None:
@@ -296,6 +338,9 @@ class ModestNode:
             msg.view.merge_into(self.registry, self.activity)
         self.activity.update(self.node_id, msg.round_k)
         self._note_active(msg.round_k)
+        # A TrainMsg for k is evidence round k's aggregation completed:
+        # it short-circuits any pending failover watch for round k-1.
+        self._seen_round = max(self._seen_round, msg.round_k)
         k = msg.round_k
         if k < self.k_train or k in self._train_done:
             return                                         # stale
@@ -339,22 +384,86 @@ class ModestNode:
             else:
                 payload = M.ModelPayload(params=None, nbytes=incoming.nbytes)
 
-            def send_agg(aggs: List[str]) -> None:
-                v = self.view()
-                for j in aggs:
-                    m = M.AggregateMsg(sender=self.node_id, round_k=k + 1,
-                                       model=M.ModelPayload(params=payload.params,
-                                                            nbytes=payload.nbytes),
-                                       view=v)
-                    self.net.account_payload(m.model.size_bytes())
-                    self.net.send(self.node_id, j, m)
-
             if self.fixed_aggregator is not None:          # FL emulation
-                send_agg([self.fixed_aggregator])
+                self._push_model(k, payload, [self.fixed_aggregator])
             else:
-                self.sampler.sample(k + 1, self.mcfg.n_aggregators, send_agg)
+                self.sampler.sample(
+                    k + 1, self.mcfg.n_aggregators,
+                    lambda aggs: self._push_model(k, payload, aggs))
 
         self._train_handle = self.sim.schedule(duration, finish)
+
+    # ------------------------------------------------------- model push + §4
+    # failover: a trainer that pushed its round-k model watches for round
+    # k+1 progress; if the designated aggregators died post-sample, it
+    # re-samples A^{k+1} *excluding them* and re-sends. The watch timer is
+    # armed only when failover is enabled (mcfg.failover — "auto" means
+    # "a fault fabric is attached"), so clean golden trajectories carry
+    # zero extra events; the duplicate-sender guard in aggregation makes
+    # re-sends safe even when the original aggregator was merely slow.
+
+    FAILOVER_TIMEOUT_MULT = 20      # x ping_timeout before declaring death
+    FAILOVER_MAX_RETRIES = 2
+
+    def failover_enabled(self) -> bool:
+        fo = getattr(self.mcfg, "failover", "auto")
+        if fo == "auto":
+            return getattr(self.net, "fault", None) is not None
+        return bool(fo)
+
+    def _push_model(self, k: int, payload: M.ModelPayload, aggs: List[str],
+                    tried=(), tries: int = 0) -> None:
+        # Legacy quirk, golden-pinned: the *first* push (tries == 0) is
+        # not gated on being online — a node that crashed while sampling
+        # A^{k+1} still flushes the model its process had already queued
+        # (the sampler continuation fires from a timer). Failover
+        # re-sends are new code and do check.
+        if tries and not self.online:
+            return
+        if (not aggs and tries <= self.FAILOVER_MAX_RETRIES
+                and self.failover_enabled()):
+            # Sampling A^{k+1} came back empty (mass unreachability): the
+            # trained model would be silently lost and the round with it.
+            # Hold it and re-sample after a timeout (gated like the S^k
+            # retry — see there).
+            self.sim.schedule(self.timeout, lambda: self.sampler.sample(
+                k + 1, self.mcfg.n_aggregators,
+                lambda a: self._push_model(k, payload, a, tried, tries + 1),
+                exclude=tried))
+            return
+        v = self.view()
+        for j in aggs:
+            m = M.AggregateMsg(sender=self.node_id, round_k=k + 1,
+                               model=M.ModelPayload(params=payload.params,
+                                                    nbytes=payload.nbytes),
+                               view=v)
+            self.net.account_payload(m.model.size_bytes())
+            self.net.send(self.node_id, j, m)
+        if (self.failover_enabled() and tries <= self.FAILOVER_MAX_RETRIES
+                and self.fixed_aggregator is None):
+            # No watch in FL-emulation mode: the fixed server is
+            # churn-exempt infrastructure (§4.3), and a decentralized
+            # re-sample would spawn rogue aggregators inside the
+            # centralized baseline.
+            tried = tuple(tried) + tuple(aggs)
+            self.sim.schedule(
+                self.FAILOVER_TIMEOUT_MULT * self.timeout,
+                lambda: self._check_failover(k, payload, tried, tries))
+
+    def _check_failover(self, k: int, payload: M.ModelPayload,
+                        tried: tuple, tries: int) -> None:
+        if (not self.online or self._seen_round > k
+                or k + 1 in self._push_acked):
+            return          # round k+1 progressed, or an aggregator acked
+        self.failovers += 1
+
+        def resend(aggs: List[str]) -> None:
+            if self._seen_round > k or k + 1 in self._push_acked:
+                return      # progress arrived while we were sampling
+            self._push_model(k, payload, aggs, tried, tries + 1)
+
+        self.sampler.sample(k + 1, self.mcfg.n_aggregators, resend,
+                            exclude=tried)
 
     # ----------------------------------------------------------------- kickoff
 

@@ -45,6 +45,7 @@ class _PendingSample:
     next_idx: int = 0
     done: bool = False
     retries: int = 0
+    exclude: frozenset = frozenset()                   # failover blacklist
 
 
 class Sampler:
@@ -63,11 +64,18 @@ class Sampler:
 
     def sample(self, round_k: int, size: int,
                cont: Callable[[List[str]], None], *,
-               _retries: int = 0) -> None:
+               exclude=(), _retries: int = 0) -> None:
+        """``exclude`` drops specific candidates from this sample — the
+        failover path re-samples A^{k+1} *without* the aggregators it
+        already tried, otherwise the deterministic hash order would hand
+        back the same (possibly wedged) node every time."""
+        exclude = frozenset(exclude)
         cands = self.node.candidates(round_k)
+        if exclude:
+            cands = [c for c in cands if c not in exclude]
         order = sample_order(cands, round_k)
         st = _PendingSample(next(self._tokens), round_k, size, cont, order,
-                            retries=_retries)
+                            retries=_retries, exclude=exclude)
         self._pending[st.token] = st
         self._by_round.setdefault(round_k, []).append(st.token)
         if not order:
@@ -166,7 +174,8 @@ class Sampler:
                 return
             self._finish(st)
             # the fresh state inherits the retry budget already burned
-            self.sample(st.round_k, st.size, st.cont, _retries=st.retries)
+            self.sample(st.round_k, st.size, st.cont, exclude=st.exclude,
+                        _retries=st.retries)
 
         self._after(st, self.node.timeout, again)
 

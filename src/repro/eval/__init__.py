@@ -20,6 +20,7 @@ from repro.eval.metrics import (  # noqa: F401
 )
 from repro.eval.scenarios import (  # noqa: F401
     DEFAULT_ALGOS,
+    FAULT_REGIMES,
     REGIMES,
     Scenario,
     run_scenario,

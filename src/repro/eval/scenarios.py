@@ -35,6 +35,8 @@ import numpy as np
 
 from repro.core.tasks import AbstractTask
 from repro.eval.metrics import EvalMetrics, compare, evaluate_session
+from repro.sim.fault import (AggregatorKill, Drop, Duplicate, FaultSchedule,
+                             Jitter, LatencySpike, Partition, Straggler)
 from repro.sim.runner import (DSGDSession, GossipSession, ModestSession,
                               fedavg_session)
 from repro.traces import (diurnal_profile, flash_crowd_profile,
@@ -45,6 +47,44 @@ REGIMES = {
     "diurnal": diurnal_profile,
     "flash_crowd": flash_crowd_profile,
     "starved_cohort": starved_cohort_profile,
+}
+
+
+def _lossy_wan(seed: int, duration: float, n: int = 64) -> FaultSchedule:
+    """Imperfect-but-functional WAN: steady loss, bounded reordering,
+    spurious retransmits."""
+    return FaultSchedule(rules=(Drop(p=0.1), Jitter(max_delay=0.2),
+                                Duplicate(p=0.05, gap=0.2)), seed=seed)
+
+
+def _flaky_core(seed: int, duration: float, n: int = 64) -> FaultSchedule:
+    """Infrastructure-level incidents: a mid-run partition of a quarter
+    of the population, a latency brownout, and a targeted aggregator
+    kill with Alg.-2 rejoin."""
+    cut = tuple(str(i) for i in range(max(2, n // 4)))
+    return FaultSchedule(rules=(
+        Partition(groups=(cut,), t0=0.3 * duration, t1=0.4 * duration),
+        LatencySpike(extra=1.5, t0=0.55 * duration, t1=0.65 * duration),
+        AggregatorKill(round_k=5, rejoin_after=0.1 * duration),
+    ), seed=seed)
+
+
+def _stragglers(seed: int, duration: float, n: int = 64) -> FaultSchedule:
+    """Transient compute slowdown of a quarter of the population for the
+    middle half of the run."""
+    return FaultSchedule(rules=(
+        Straggler(nodes=max(1, n // 4), factor=5.0, t0=0.25 * duration,
+                  t1=0.75 * duration),), seed=seed)
+
+
+# Fault regimes composing with the trace regimes above (docs/FAULTS.md):
+# every factory is (seed, duration, n) -> FaultSchedule, so schedules
+# scale with the scenario horizon and population and stay
+# seed-reproducible.
+FAULT_REGIMES = {
+    "lossy_wan": _lossy_wan,
+    "flaky_core": _flaky_core,
+    "stragglers": _stragglers,
 }
 
 _SESSIONS = {
@@ -69,6 +109,7 @@ class Scenario:
     model_bytes: int = 346_000        # CIFAR-10 CNN (Table 3)
     target_round: int = 20            # time-to-accuracy proxy round
     contention: bool = True
+    fault: Optional[str] = None       # key of FAULT_REGIMES (None = clean)
 
     def profile(self):
         try:
@@ -77,6 +118,16 @@ class Scenario:
             raise ValueError(f"unknown regime {self.regime!r}; "
                              f"one of {sorted(REGIMES)}") from None
         return factory(self.n, seed=self.seed)
+
+    def fault_schedule(self):
+        if self.fault is None:
+            return None
+        try:
+            factory = FAULT_REGIMES[self.fault]
+        except KeyError:
+            raise ValueError(f"unknown fault regime {self.fault!r}; "
+                             f"one of {sorted(FAULT_REGIMES)}") from None
+        return factory(self.seed, self.duration, self.n)
 
 
 def run_scenario(sc: Scenario, *, task=None, data=None,
@@ -95,7 +146,8 @@ def run_scenario(sc: Scenario, *, task=None, data=None,
     task = task or AbstractTask(model_bytes_=sc.model_bytes)
     t0 = time.perf_counter()
     session = session_cls(profile=sc.profile(), task=task, data=data,
-                          seed=sc.seed, contention=sc.contention)
+                          seed=sc.seed, contention=sc.contention,
+                          fault=sc.fault_schedule())
     result = session.run(sc.duration)
     wall = time.perf_counter() - t0
     metrics = evaluate_session(
@@ -109,6 +161,8 @@ def run_scenario(sc: Scenario, *, task=None, data=None,
         "sim_events": session.sim.events_processed,
         "events_per_s": int(session.sim.events_processed / max(wall, 1e-9)),
         "churn_events": result.churn_events,
+        "fault": sc.fault or "clean",
+        "fault_injections": int(sum(result.fault_stats.values())),
     })
     return result, metrics
 
@@ -120,44 +174,53 @@ def _mean_or_none(vals):
 
 def scenario_matrix(*, algos: Sequence[str] = DEFAULT_ALGOS,
                     regimes: Iterable[str] = tuple(REGIMES),
+                    faults: Sequence[Optional[str]] = (None,),
                     n: int = 64, seeds: Sequence[int] = (0,),
                     duration: float = 300.0, model_bytes: int = 346_000,
                     target_round: int = 20, contention: bool = True,
                     task=None, data=None, target: Optional[float] = None,
                     ) -> Dict[str, object]:
     """Sweep the full matrix; returns ``rows`` (one per cell × seed),
-    ``summary`` (seed-averaged, one per cell) and ``ratios`` (per regime,
-    baselines vs MoDeST)."""
+    ``summary`` (seed-averaged, one per cell) and ``ratios`` (per
+    regime × fault, baselines vs MoDeST). ``faults`` adds the fault-
+    injection axis: each entry is a :data:`FAULT_REGIMES` key or None
+    for the clean fabric (ratio keys become ``"regime+fault"`` for the
+    faulty cells)."""
     rows, summary, ratios = [], [], {}
     for regime in regimes:
-        per_algo: Dict[str, EvalMetrics] = {}
-        for algo in algos:
-            runs = []
-            for seed in seeds:
-                sc = Scenario(algo=algo, regime=regime, n=n, seed=seed,
-                              duration=duration, model_bytes=model_bytes,
-                              target_round=target_round,
-                              contention=contention)
-                _, m = run_scenario(sc, task=task, data=data, target=target)
-                runs.append(m)
-                rows.append(m.as_row())
-            mean = EvalMetrics(
-                algo=algo,
-                time_to_target_s=_mean_or_none(
-                    [m.time_to_target_s for m in runs]),
-                communication_bytes=int(np.mean(
-                    [m.communication_bytes for m in runs])),
-                train_node_seconds=float(np.mean(
-                    [m.train_node_seconds for m in runs])),
-                rounds_completed=int(np.mean(
-                    [m.rounds_completed for m in runs])),
-                target=runs[0].target,
-                extras={"regime": regime, "n": n, "seeds": len(seeds),
-                        "reached_target": sum(
-                            m.time_to_target_s is not None for m in runs)},
-            )
-            per_algo[algo] = mean
-            summary.append(mean.as_row())
-        if "modest" in per_algo and len(per_algo) > 1:
-            ratios[regime] = compare(per_algo, baseline_of="modest")
+        for fault in faults:
+            per_algo: Dict[str, EvalMetrics] = {}
+            for algo in algos:
+                runs = []
+                for seed in seeds:
+                    sc = Scenario(algo=algo, regime=regime, n=n, seed=seed,
+                                  duration=duration, model_bytes=model_bytes,
+                                  target_round=target_round,
+                                  contention=contention, fault=fault)
+                    _, m = run_scenario(sc, task=task, data=data,
+                                        target=target)
+                    runs.append(m)
+                    rows.append(m.as_row())
+                mean = EvalMetrics(
+                    algo=algo,
+                    time_to_target_s=_mean_or_none(
+                        [m.time_to_target_s for m in runs]),
+                    communication_bytes=int(np.mean(
+                        [m.communication_bytes for m in runs])),
+                    train_node_seconds=float(np.mean(
+                        [m.train_node_seconds for m in runs])),
+                    rounds_completed=int(np.mean(
+                        [m.rounds_completed for m in runs])),
+                    target=runs[0].target,
+                    extras={"regime": regime, "fault": fault or "clean",
+                            "n": n, "seeds": len(seeds),
+                            "reached_target": sum(
+                                m.time_to_target_s is not None
+                                for m in runs)},
+                )
+                per_algo[algo] = mean
+                summary.append(mean.as_row())
+            if "modest" in per_algo and len(per_algo) > 1:
+                key = regime if fault is None else f"{regime}+{fault}"
+                ratios[key] = compare(per_algo, baseline_of="modest")
     return {"rows": rows, "summary": summary, "ratios": ratios}

@@ -7,9 +7,14 @@ simulates time for its DL comparisons, §4.2). Provides:
 * :class:`repro.sim.network.Network` — latency-matrix message delivery with
   per-node / per-message-type byte accounting (Table 4)
 * :mod:`repro.sim.churn` — join/leave/crash schedules (Figs. 5–6)
+* :mod:`repro.sim.fault` — declarative fault injection (loss, duplication,
+  reordering, partitions, stragglers, aggregator kills; docs/FAULTS.md)
 * :mod:`repro.sim.runner` — session drivers for MoDeST / FedAvg / D-SGD
 """
 
 from repro.sim.churn import AvailabilityDriver  # noqa: F401
 from repro.sim.clock import Simulator  # noqa: F401
+from repro.sim.fault import (AggregatorKill, Drop, Duplicate,  # noqa: F401
+                             FaultInjector, FaultSchedule, Jitter,
+                             LatencySpike, Partition, Straggler)
 from repro.sim.network import Network, wan_latency_matrix  # noqa: F401

@@ -41,7 +41,17 @@ class AvailabilityDriver:
                 if not self.profile.timeline(nid).is_online(at)]
 
     def install(self, horizon: float) -> int:
-        """Schedule all transitions in (now, now + horizon]; returns count."""
+        """Schedule all transitions in (now, now + horizon]; returns count.
+
+        Tie-breaking contract (pinned by ``tests/test_faults.py::
+        test_offline_beats_delivery_on_shared_timestamp``): the event
+        queue breaks equal-timestamp ties by insertion order, and
+        ``install`` runs at session start — before any protocol traffic
+        is scheduled — so an availability transition always executes
+        *before* a message delivery sharing its timestamp. A message
+        arriving exactly when its destination goes offline is therefore
+        deterministically dropped, in every protocol.
+        """
         t0 = self.sim.now
         for nid in self.node_ids:
             for t, goes_online in self.profile.timeline(nid).transitions(

@@ -116,6 +116,7 @@ class Network:
         self.msgs_by_type = defaultdict(int)
 
     _profile = None     # set by from_profile: the single source of truth
+    fault = None        # set by sim.fault.FaultInjector; None = clean fabric
 
     @classmethod
     def from_profile(cls, sim, profile, *, contention: bool = True,
@@ -245,6 +246,29 @@ class Network:
             n.receive(msg)
 
         lat = self.latency(src, dst)
+        if self.fault is None or src == dst:
+            # Clean fabric (and loopback, which never traverses the WAN
+            # and is exempt from link faults): the exact pre-fault path,
+            # so fault=None sessions stay byte-identical by construction.
+            self._dispatch(src, dst, msg, size, lat, deliver)
+            return
+        for i, fault_lat in enumerate(self.fault.transit(src, dst, msg, lat)):
+            if i:
+                # spurious retransmission: the duplicate is real traffic
+                # and the sender pays for it again; a duplicated *model*
+                # is still payload, not protocol overhead, so mirror the
+                # account_payload() the sender made for the first copy
+                self.bytes_out[src] += size
+                self.bytes_by_type[type(msg).__name__] += size
+                self.msgs_by_type[type(msg).__name__] += 1
+                model = getattr(msg, "model", None)
+                if model is not None:
+                    self._payload_bytes += model.size_bytes()
+            self._dispatch(src, dst, msg, size, fault_lat, deliver)
+
+    def _dispatch(self, src: str, dst: str, msg, size: int, lat: float,
+                  deliver: Callable[[], None]) -> None:
+        """Schedule one copy of a message with one-way latency ``lat``."""
         if self.contention and src == dst:
             # Loopback (a node sampled into its own S^k hands the model to
             # itself): never traverses the last mile, so it must not steal
@@ -272,6 +296,12 @@ class Network:
             if n is not None and not n.online:
                 self.flows_aborted += 1
                 return
+        # A payload launched just before a partition cut must not sneak
+        # through: its flow would start *inside* the window (transit() was
+        # consulted at send time, before the cut existed).
+        if self.fault is not None and self.fault.severed(src, dst):
+            self.flows_aborted += 1
+            return
         f = _Flow(src, dst, nbytes, deliver, self.sim.now)
         self._out[src][f] = None
         self._in[dst][f] = None
@@ -307,6 +337,26 @@ class Network:
             self.flows_aborted += 1
             seeds.extend((("u", f.src), ("d", f.dst)))
         self._reallocate(seeds)
+
+    def abort_flows(self, pred: Callable[[str, str], bool]) -> int:
+        """Abort every in-flight flow whose ``(src, dst)`` satisfies
+        ``pred`` — e.g. transfers crossing a network partition cut — and
+        hand their capacity back to the surviving flows. Returns the
+        number of flows killed. No-op under ``contention=False`` (there
+        are no flows to kill; delivery-time checks still apply)."""
+        if not self.contention:
+            return 0
+        doomed = [f for fs in self._out.values() for f in fs
+                  if pred(f.src, f.dst)]
+        if not doomed:
+            return 0
+        seeds = []
+        for f in doomed:
+            self._remove_flow(f)
+            self.flows_aborted += 1
+            seeds.extend((("u", f.src), ("d", f.dst)))
+        self._reallocate(seeds)
+        return len(doomed)
 
     def _component(self, seed_resources, seed_flows=()):
         """Flows coupled (directly or transitively) to the seeds, walking

@@ -11,6 +11,7 @@ the protocol for a simulated duration, and collects:
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -28,7 +29,14 @@ from repro.data.loader import FederatedData
 from repro.engine.cohort import make_engine
 from repro.sim.churn import AvailabilityDriver
 from repro.sim.clock import Simulator
+from repro.sim.fault import FaultInjector
 from repro.sim.network import Network
+
+
+def _fault_setup(session, fault):
+    """Bind a FaultSchedule to a session (None = clean fabric, which keeps
+    the pre-fault network code path byte-for-byte)."""
+    return None if fault is None else FaultInjector(fault, session)
 
 
 def _speeds(n: int, seed: int, base: float = 0.05, spread: float = 3.0):
@@ -87,6 +95,7 @@ class SessionResult:
     rounds_completed: int = 0
     final_metrics: dict = field(default_factory=dict)
     churn_events: int = 0             # availability transitions fired
+    fault_stats: Dict[str, int] = field(default_factory=dict)  # injections
     # training resources (paper §4.5): node-seconds of on-device compute,
     # including compute burned by trainings that were cancelled/crashed
     train_node_seconds: float = 0.0
@@ -129,7 +138,8 @@ class ModestSession:
                  fixed_aggregator: bool = False,
                  profile=None, churn_from_profile: bool = True,
                  contention: bool = True,
-                 engine: Optional[str] = None):
+                 engine: Optional[str] = None,
+                 fault=None):
         n_nodes, task = _profile_defaults(profile, n_nodes, task,
                                           extra_required=(("mcfg", mcfg),))
         # Churny regimes need sf < 1 to keep rounds moving when sampled
@@ -140,6 +150,9 @@ class ModestSession:
         self.sim = Simulator()
         self.net, speeds = _net_and_speeds(self.sim, n_nodes, profile,
                                            bandwidth, seed, contention)
+        # Bound before any protocol traffic so even the round-1 bootstrap
+        # (which pings under fixed_aggregator) goes through the fabric.
+        self.fault_injector = _fault_setup(self, fault)
         self.mcfg, self.tcfg, self.task = mcfg, tcfg, task
         self.engine = make_engine(engine, task)
         self.eval_every = eval_every_rounds
@@ -226,6 +239,7 @@ class ModestSession:
                        else M.ModelPayload(nbytes=self.task.model_bytes()))
             server.k_agg = 1
             server._theta_list = [payload]
+            server._theta_from = [server.node_id]
             server._do_aggregate(1)
         else:
             for nid in online[:self.mcfg.sample_size]:
@@ -318,9 +332,13 @@ class ModestSession:
     def run(self, duration: float) -> SessionResult:
         if self.churn_driver is not None:
             self.churn_driver.install(duration)
+        if self.fault_injector is not None:
+            self.fault_injector.install(duration)
         self.sim.run(until=duration)
         if self.churn_driver is not None:
             self.result.churn_events = self.churn_driver.events_fired
+        if self.fault_injector is not None:
+            self.result.fault_stats = dict(self.fault_injector.stats)
         # Evaluate collected models (lazily, once, at the end — evaluation
         # does not consume simulated time, matching §4.2). One vmapped
         # sweep over all snapshots for tasks that support it.
@@ -364,7 +382,9 @@ class _DSGDNode:
         self.params = None
         self.round = 1
         self.trained = False
-        self.inbox: Dict[int, list] = {}
+        self.inbox: Dict[int, list] = {}       # round -> [(sender, model)]
+        self.agg_log: list = []                # (round, senders) audit trail
+        self.dup_models_dropped = 0
         self.train_seconds = 0.0
         self.trainings_completed = 0
         self._train_started_at = 0.0
@@ -419,15 +439,26 @@ class _DSGDNode:
 
     def receive(self, msg):
         if isinstance(msg, M.AggregateMsg):
-            self.inbox.setdefault(msg.round_k, []).append(msg.model)
+            box = self.inbox.setdefault(msg.round_k, [])
+            if any(s == msg.sender for s, _ in box):
+                # Duplicated delivery (fault fabric): the exponential
+                # graph has exactly one in-neighbor per round, so a
+                # second copy from the same sender would double-weight
+                # its model in the synchronous average.
+                self.dup_models_dropped += 1
+                return
+            box.append((msg.sender, msg.model))
             self.maybe_advance()
 
     def maybe_advance(self):
         if self.trained and self.inbox.get(self.round):
             incoming = self.inbox.pop(self.round)
+            self.agg_log.append(
+                (self.round,
+                 (self.node_id,) + tuple(s for s, _ in incoming)))
             if self.params is not None:
                 self.params = self.session.engine.aggregate(
-                    [self.params] + [m.params for m in incoming])
+                    [self.params] + [m.params for _, m in incoming])
             self.round += 1
             self.session.on_round(self.node_id, self.round, self.params)
             self.start_round()
@@ -448,12 +479,14 @@ class DSGDSession:
                  data: Optional[FederatedData] = None, bandwidth: float = 20e6,
                  seed: int = 0, eval_every_rounds: int = 10,
                  profile=None, churn_from_profile: bool = True,
-                 contention: bool = True, engine: Optional[str] = None):
+                 contention: bool = True, engine: Optional[str] = None,
+                 fault=None):
         n_nodes, task = _profile_defaults(profile, n_nodes, task)
         tcfg = tcfg or TrainConfig()
         self.sim = Simulator()
         self.net, speeds = _net_and_speeds(self.sim, n_nodes, profile,
                                            bandwidth, seed, contention)
+        self.fault_injector = _fault_setup(self, fault)
         self.tcfg, self.task = tcfg, task
         self.engine = make_engine(engine, task)
         self.eval_every = eval_every_rounds
@@ -501,12 +534,16 @@ class DSGDSession:
     def run(self, duration: float) -> SessionResult:
         if self.churn_driver is not None:
             self.churn_driver.install(duration)
+        if self.fault_injector is not None:
+            self.fault_injector.install(duration)
         for node in self.nodes.values():
             if node.online:
                 node.start_round()
         self.sim.run(until=duration)
         if self.churn_driver is not None:
             self.result.churn_events = self.churn_driver.events_fired
+        if self.fault_injector is not None:
+            self.result.fault_stats = dict(self.fault_injector.stats)
         if self.data is not None and self.data.test is not None:
             for k, snaps in sorted(self._snapshots.items()):
                 metrics = self.engine.evaluate_models([p for _, p in snaps],
@@ -630,12 +667,13 @@ class GossipSession:
                  seed: int = 0, eval_every_rounds: int = 10,
                  period: float = 5.0, profile=None,
                  churn_from_profile: bool = True, contention: bool = True,
-                 engine: Optional[str] = None):
+                 engine: Optional[str] = None, fault=None):
         n_nodes, task = _profile_defaults(profile, n_nodes, task)
         tcfg = tcfg or TrainConfig()
         self.sim = Simulator()
         self.net, speeds = _net_and_speeds(self.sim, n_nodes, profile,
                                            bandwidth, seed, contention)
+        self.fault_injector = _fault_setup(self, fault)
         self.tcfg, self.task = tcfg, task
         self.engine = make_engine(engine, task)
         self.eval_every = eval_every_rounds
@@ -685,12 +723,16 @@ class GossipSession:
     def run(self, duration: float) -> SessionResult:
         if self.churn_driver is not None:
             self.churn_driver.install(duration)
+        if self.fault_injector is not None:
+            self.fault_injector.install(duration)
         for node in self.nodes.values():
             if node.online:
                 node.start()
         self.sim.run(until=duration)
         if self.churn_driver is not None:
             self.result.churn_events = self.churn_driver.events_fired
+        if self.fault_injector is not None:
+            self.result.fault_stats = dict(self.fault_injector.stats)
         if self.data is not None and self.data.test is not None:
             snaps = sorted(self._snapshots.items())
             metrics = self.engine.evaluate_models([p for _, (_, p) in snaps],
@@ -720,9 +762,7 @@ def fedavg_session(**kw) -> ModestSession:
             raise TypeError("fedavg_session requires mcfg= or profile=")
         n = kw.get("n_nodes") or profile.n
         mcfg = ModestConfig(n_nodes=n, ping_timeout=1.0)
-    mcfg = ModestConfig(
-        n_nodes=mcfg.n_nodes, sample_size=mcfg.sample_size, n_aggregators=1,
-        success_fraction=1.0, ping_timeout=mcfg.ping_timeout,
-        activity_window=mcfg.activity_window, local_steps=mcfg.local_steps,
-        seed=mcfg.seed)
+    # dataclasses.replace, not a field-by-field rebuild: any other field
+    # the caller set (failover, future knobs) must survive the override.
+    mcfg = dataclasses.replace(mcfg, n_aggregators=1, success_fraction=1.0)
     return ModestSession(mcfg=mcfg, fixed_aggregator=True, **kw)

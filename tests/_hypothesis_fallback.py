@@ -7,9 +7,16 @@ example databases; with this fallback each ``@given`` test still runs
 ``max_examples`` seeded-random examples (seeded from the test's qualified
 name, so runs are reproducible and failures can be re-run locally).
 
-Supported surface: ``given``, ``settings(max_examples=, deadline=)``,
-``assume``, and ``strategies.{integers, floats, booleans, sampled_from,
-tuples, lists, text, just, data}`` plus ``.map``/``.filter``.
+Supported surface: ``given``, ``settings(max_examples=, deadline=,
+stateful_step_count=)``, ``assume``, ``strategies.{integers, floats,
+booleans, sampled_from, tuples, lists, text, just, data}`` plus
+``.map``/``.filter``, and the ``hypothesis.stateful`` slice the
+conformance suite uses: ``RuleBasedStateMachine``, ``rule``,
+``initialize``, ``invariant``, ``precondition`` and
+``run_state_machine_as_test`` (no bundles). The stateful driver runs
+``max_examples`` seeded-random rule sequences of up to
+``stateful_step_count`` steps, checking every ``@invariant`` after each
+step; failures report the machine seed so a schedule can be replayed.
 """
 
 from __future__ import annotations
@@ -19,6 +26,7 @@ import random
 import string
 import sys
 import types
+import unittest
 
 
 class _Unsatisfied(Exception):
@@ -138,8 +146,10 @@ DEFAULT_MAX_EXAMPLES = 25
 class settings:
     """Decorator form only (``@settings(max_examples=..., deadline=...)``)."""
 
-    def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None,
+                 stateful_step_count=None, **_kw):
         self.max_examples = max_examples
+        self.stateful_step_count = stateful_step_count
 
     def __call__(self, fn):
         fn._fallback_max_examples = self.max_examples
@@ -183,19 +193,164 @@ def given(*arg_strategies, **kw_strategies):
     return decorate
 
 
+# ---------------------------------------------------------------------------
+# hypothesis.stateful (the RuleBasedStateMachine slice)
+# ---------------------------------------------------------------------------
+
+DEFAULT_STEP_COUNT = 12
+
+
+def rule(**kw_strategies):
+    """Mark a machine method as a rule; kwargs are strategies drawn per
+    invocation (matching the real decorator's keyword-only surface)."""
+
+    def decorate(fn):
+        fn._fallback_rule = dict(kw_strategies)
+        return fn
+
+    return decorate
+
+
+def initialize(**kw_strategies):
+    def decorate(fn):
+        fn._fallback_initialize = dict(kw_strategies)
+        return fn
+
+    return decorate
+
+
+def invariant():
+    def decorate(fn):
+        fn._fallback_invariant = True
+        return fn
+
+    return decorate
+
+
+def precondition(predicate):
+    """Stacks with ``@rule`` in either decorator order (both mutate the
+    same function object)."""
+
+    def decorate(fn):
+        fn._fallback_preconditions = (
+            getattr(fn, "_fallback_preconditions", ()) + (predicate,))
+        return fn
+
+    return decorate
+
+
+class _TestCaseDescriptor:
+    """``Machine.TestCase`` — a ``unittest.TestCase`` with a single
+    ``runTest``, which is exactly what pytest collects for hypothesis's
+    real stateful API, so test modules are source-identical either way."""
+
+    def __get__(self, obj, owner):
+        machine_cls = owner
+
+        class MachineTestCase(unittest.TestCase):
+            settings = None
+
+            def runTest(self):
+                run_state_machine_as_test(machine_cls,
+                                          settings=type(self).settings)
+
+        MachineTestCase.__name__ = machine_cls.__name__ + "TestCase"
+        MachineTestCase.__qualname__ = MachineTestCase.__name__
+        MachineTestCase.__module__ = machine_cls.__module__
+        return MachineTestCase
+
+
+class RuleBasedStateMachine:
+    TestCase = _TestCaseDescriptor()
+
+    def teardown(self):
+        pass
+
+    @classmethod
+    def _collect(cls, attr):
+        out = []
+        for name in dir(cls):
+            fn = getattr(cls, name, None)
+            if callable(fn) and hasattr(fn, attr):
+                out.append((name, fn))
+        return sorted(out)      # definition-independent, deterministic order
+
+
+def _preconditions_hold(machine, fn) -> bool:
+    return all(p(machine) for p in getattr(fn, "_fallback_preconditions", ()))
+
+
+def run_state_machine_as_test(cls, settings=None, _rng=None):
+    """Seeded-random driver: build a machine, fire ``@initialize`` rules,
+    then a random sequence of enabled ``@rule``s, checking every
+    ``@invariant`` after setup and after each step."""
+    n_examples = getattr(settings, "max_examples", None) or DEFAULT_MAX_EXAMPLES
+    n_steps = getattr(settings, "stateful_step_count", None) or DEFAULT_STEP_COUNT
+    inits = cls._collect("_fallback_initialize")
+    rules = cls._collect("_fallback_rule")
+    invariants = cls._collect("_fallback_invariant")
+    if not rules:
+        raise RuntimeError(f"{cls.__name__} defines no @rule methods")
+    base = int.from_bytes(
+        hashlib.sha256(cls.__qualname__.encode()).digest()[:8], "big")
+    for i in range(n_examples):
+        seed = base + i
+        rng = _rng if _rng is not None else random.Random(seed)
+        machine = cls()
+        trace = []
+        try:
+            def check_invariants():
+                for _, inv in invariants:
+                    inv(machine)
+
+            for _, fn in inits:
+                kwargs = {k: s.example_with(rng)
+                          for k, s in fn._fallback_initialize.items()}
+                fn(machine, **kwargs)
+            check_invariants()
+            for _ in range(rng.randint(1, n_steps)):
+                enabled = [(name, fn) for name, fn in rules
+                           if _preconditions_hold(machine, fn)]
+                if not enabled:
+                    break
+                name, fn = enabled[rng.randrange(len(enabled))]
+                kwargs = {k: s.example_with(rng)
+                          for k, s in fn._fallback_rule.items()}
+                trace.append((name, kwargs))
+                fn(machine, **kwargs)
+                check_invariants()
+        except _Unsatisfied:
+            continue                     # assume() inside a rule: discard
+        except Exception as exc:
+            steps = "\n".join(f"  {n}({kw})" for n, kw in trace) or "  <setup>"
+            raise AssertionError(
+                f"{cls.__name__} falsified on example {i} "
+                f"(machine seed {seed}); replay the schedule with "
+                f"random.Random({seed}):\n{steps}") from exc
+        finally:
+            machine.teardown()
+
+
 def install() -> None:
-    """Register ``hypothesis`` + ``hypothesis.strategies`` stub modules."""
+    """Register ``hypothesis`` + ``hypothesis.strategies`` +
+    ``hypothesis.stateful`` stub modules."""
     hyp = types.ModuleType("hypothesis")
     st = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "booleans", "sampled_from", "tuples",
                  "lists", "text", "just", "data"):
         setattr(st, name, globals()[name])
     st.SearchStrategy = SearchStrategy
+    stateful = types.ModuleType("hypothesis.stateful")
+    for name in ("RuleBasedStateMachine", "rule", "initialize", "invariant",
+                 "precondition", "run_state_machine_as_test"):
+        setattr(stateful, name, globals()[name])
     hyp.given = given
     hyp.settings = settings
     hyp.assume = assume
     hyp.strategies = st
+    hyp.stateful = stateful
     hyp.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
     hyp.__is_repro_fallback__ = True
     sys.modules["hypothesis"] = hyp
     sys.modules["hypothesis.strategies"] = st
+    sys.modules["hypothesis.stateful"] = stateful

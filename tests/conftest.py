@@ -15,3 +15,12 @@ except ImportError:
     from _hypothesis_fallback import install as _install_hypothesis_fallback
 
     _install_hypothesis_fallback()
+else:
+    # CI runs the conformance job under HYPOTHESIS_PROFILE=ci: fixed
+    # (derandomized) example generation so a red run reproduces locally,
+    # no per-example deadline (a fault schedule legitimately simulates
+    # minutes of WAN time). Hypothesis auto-loads the profile named by
+    # the env var; registering is all that's needed here. The fallback
+    # shim is deterministic by construction and ignores profiles.
+    hypothesis.settings.register_profile(
+        "ci", derandomize=True, deadline=None)

@@ -1,0 +1,235 @@
+"""Stateful protocol-conformance suite.
+
+A hypothesis ``RuleBasedStateMachine`` drives random fault schedules —
+loss/duplication/jitter windows, latency spikes, partitions, stragglers,
+node kill/heal — interleaved with time advancement against live
+Modest/DSGD/Gossip sessions, and checks machine-checkable invariants
+after every step:
+
+* **monotone round progression** — ``round_times`` strictly increasing
+  in both time and round number, never exceeding the simulator clock;
+* **byte conservation** — total received <= total sent (loss and crash
+  can only destroy bytes in transit, never mint them);
+* **no model aggregated twice per round** — every aggregation's sender
+  list is duplicate-free (MoDeST's ``agg_log`` audit trail);
+* **sane fault accounting** — injector counters are non-negative and
+  only grow.
+
+Liveness under bounded loss and two-run determinism are separate
+``@given`` properties below (they need whole-run horizons, not per-step
+checks). With real hypothesis the machines shrink failing schedules;
+under ``tests/_hypothesis_fallback.py`` each machine runs seeded-random
+rule sequences (the failure message prints the machine seed — rebuild
+the schedule from it to reproduce, see docs/FAULTS.md).
+
+CI runs this file as its own ``conformance`` job: 3 machines x 20
+examples + the property tests = 70+ random schedules per push.
+"""
+
+import hashlib
+import json
+
+from hypothesis import given, settings, strategies as st
+from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                 invariant, rule)
+
+from repro.config import ModestConfig
+from repro.core.tasks import AbstractTask
+from repro.sim.fault import (Drop, Duplicate, FaultSchedule, Jitter,
+                             LatencySpike, Partition, Straggler)
+from repro.sim.runner import DSGDSession, GossipSession, ModestSession
+
+N = 16
+MCFG = ModestConfig(n_nodes=N, sample_size=4, n_aggregators=2,
+                    success_fraction=0.75, ping_timeout=1.0,
+                    activity_window=20)
+
+
+def _session(cls, seed, fault):
+    kw = dict(n_nodes=N, task=AbstractTask(model_bytes_=100_000),
+              seed=seed, fault=fault)
+    if cls is ModestSession:
+        kw["mcfg"] = MCFG
+    return cls(**kw)
+
+
+class _FaultConformance(RuleBasedStateMachine):
+    """Shared machine body; concrete protocols subclass with session_cls."""
+
+    session_cls = None
+
+    @initialize(seed=st.integers(0, 2**16))
+    def setup(self, seed):
+        self.session = _session(self.session_cls, seed,
+                                FaultSchedule(rules=(), seed=seed))
+        self.injector = self.session.fault_injector
+        self.injector.install(10_000.0)
+        if self.session_cls is not ModestSession:
+            for node in self.session.nodes.values():
+                (node.start_round if self.session_cls is DSGDSession
+                 else node.start)()
+        self.t = 0.0
+        self._last_stats = {}
+
+    # ------------------------------------------------------------- rules
+
+    @rule(dt=st.floats(1.0, 15.0))
+    def advance(self, dt):
+        self.t += dt
+        self.session.sim.run(until=self.t)
+
+    @rule(p=st.floats(0.05, 0.35), dur=st.floats(2.0, 12.0))
+    def loss_window(self, p, dur):
+        self.injector.add(Drop(p=p, t0=self.t, t1=self.t + dur))
+
+    @rule(p=st.floats(0.05, 0.4), gap=st.floats(0.01, 0.5),
+          dur=st.floats(2.0, 12.0))
+    def duplicate_window(self, p, gap, dur):
+        self.injector.add(Duplicate(p=p, gap=gap, t0=self.t,
+                                    t1=self.t + dur))
+
+    @rule(d=st.floats(0.02, 0.5), dur=st.floats(2.0, 12.0))
+    def jitter_window(self, d, dur):
+        self.injector.add(Jitter(max_delay=d, t0=self.t, t1=self.t + dur))
+
+    @rule(extra=st.floats(0.2, 3.0), dur=st.floats(1.0, 8.0))
+    def latency_spike(self, extra, dur):
+        self.injector.add(LatencySpike(extra=extra, t0=self.t,
+                                       t1=self.t + dur))
+
+    @rule(cut=st.integers(1, N - 1), dur=st.floats(2.0, 10.0))
+    def partition_window(self, cut, dur):
+        group = tuple(str(i) for i in range(cut))
+        self.injector.add(Partition(groups=(group,), t0=self.t,
+                                    t1=self.t + dur))
+
+    @rule(k=st.integers(1, 3), factor=st.floats(2.0, 8.0),
+          dur=st.floats(2.0, 15.0))
+    def straggler_window(self, k, factor, dur):
+        self.injector.add(Straggler(nodes=k, factor=factor, t0=self.t,
+                                    t1=self.t + dur))
+
+    @rule(victim=st.integers(0, N - 1), downtime=st.floats(1.0, 12.0))
+    def kill_and_heal(self, victim, downtime):
+        nid = str(victim)
+        self.session._trace_offline(nid)
+        self.session.sim.schedule(downtime,
+                                  lambda: self.session._trace_online(nid))
+
+    # -------------------------------------------------------- invariants
+
+    @invariant()
+    def rounds_monotone(self):
+        rt = self.session.result.round_times
+        for (t0, k0), (t1, k1) in zip(rt, rt[1:]):
+            assert t1 >= t0, f"round time went backwards: {t0} -> {t1}"
+            assert k1 > k0, f"round number not increasing: {k0} -> {k1}"
+        if rt:
+            assert rt[-1][0] <= self.session.sim.now + 1e-9
+
+    @invariant()
+    def bytes_conserved(self):
+        net = self.session.net
+        sent = sum(net.bytes_out.values())
+        received = sum(net.bytes_in.values())
+        assert received <= sent, (
+            f"minted bytes from nothing: received {received} > sent {sent}")
+
+    @invariant()
+    def no_model_aggregated_twice(self):
+        # agg_log exists on MoDeST and D-SGD nodes (round-scoped
+        # aggregation). Gossip is exempt by design: its receiver-side
+        # averaging has no round-unique contribution to double-count —
+        # a duplicated push is just one more gossip exchange.
+        for node in self.session.nodes.values():
+            for k, senders in getattr(node, "agg_log", ()):
+                assert len(senders) == len(set(senders)), (
+                    f"node {node.node_id} aggregated a sender twice in "
+                    f"round {k}: {senders}")
+
+    @invariant()
+    def fault_stats_monotone(self):
+        stats = dict(self.injector.stats)
+        for key, v in stats.items():
+            assert v >= self._last_stats.get(key, 0), (
+                f"fault counter {key} went backwards")
+            assert v >= 0
+        self._last_stats = stats
+
+
+class ModestConformance(_FaultConformance):
+    session_cls = ModestSession
+
+
+class DSGDConformance(_FaultConformance):
+    session_cls = DSGDSession
+
+
+class GossipConformance(_FaultConformance):
+    session_cls = GossipSession
+
+
+_MACHINE_SETTINGS = settings(max_examples=20, deadline=None,
+                             stateful_step_count=10)
+
+TestModestConformance = ModestConformance.TestCase
+TestDSGDConformance = DSGDConformance.TestCase
+TestGossipConformance = GossipConformance.TestCase
+for _tc in (TestModestConformance, TestDSGDConformance,
+            TestGossipConformance):
+    _tc.settings = _MACHINE_SETTINGS
+del _tc        # or pytest collects the loop variable as a duplicate test
+
+
+# ---------------------------------------------------------------------------
+# Whole-run properties (need a full horizon, not per-step checks)
+# ---------------------------------------------------------------------------
+
+
+def _random_schedule(seed: int) -> FaultSchedule:
+    """A bounded-severity schedule derived entirely from one seed (this
+    is the reproduction recipe docs/FAULTS.md points at)."""
+    import random
+
+    r = random.Random(seed)
+    rules = [Drop(p=r.uniform(0.05, 0.25)),
+             Jitter(max_delay=r.uniform(0.05, 0.4)),
+             Duplicate(p=r.uniform(0.05, 0.3), gap=r.uniform(0.05, 0.3))]
+    if r.random() < 0.5:
+        t0 = r.uniform(20, 60)
+        rules.append(Partition(groups=(tuple(str(i) for i in
+                                             range(r.randint(2, 6))),),
+                               t0=t0, t1=t0 + r.uniform(3, 10)))
+    if r.random() < 0.5:
+        t0 = r.uniform(10, 80)
+        rules.append(Straggler(nodes=r.randint(1, 3),
+                               factor=r.uniform(2, 6),
+                               t0=t0, t1=t0 + r.uniform(5, 20)))
+    return FaultSchedule(rules=tuple(rules), seed=seed)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_eventual_completion_under_bounded_loss(seed):
+    """Bounded loss never wedges MoDeST: rounds keep completing through
+    the whole horizon, whatever the (bounded-severity) schedule."""
+    res = _session(ModestSession, seed % 7,
+                   _random_schedule(seed)).run(150.0)
+    assert res.rounds_completed >= 5
+    assert any(t > 100.0 for t, _ in res.round_times), (
+        "no round completed in the final third — wedged?")
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_two_run_determinism_given_seed(seed):
+    """(session seed, schedule) -> trajectory is a pure function."""
+
+    def fingerprint(cls):
+        res = _session(cls, seed % 5, _random_schedule(seed)).run(100.0)
+        blob = json.dumps({"rt": res.round_times, "usage": res.usage,
+                           "fault": res.fault_stats}, sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    for cls in (ModestSession, DSGDSession, GossipSession):
+        assert fingerprint(cls) == fingerprint(cls), cls.__name__

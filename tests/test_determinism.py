@@ -67,3 +67,30 @@ def test_golden_seed_snapshot(session_cls):
         "semantics drifted from the golden PR-2 trajectory — if the "
         "change is intentional, update GOLDEN with the new values and "
         "say why in the commit message")
+
+
+# (rounds, total_bytes, fingerprint) of a diurnal n=64 seed=5 run over 240
+# simulated seconds, captured at PR-4 semantics immediately before the
+# fault-injection fabric landed. ``fault=None`` must keep the network on
+# the exact pre-fault code path — injection is zero-cost-by-default — so
+# these values pin that the fabric, the duplicate-sender guard, and the
+# (auto-gated) aggregator failover leave clean trajectories byte-identical.
+GOLDEN_PR4_NOFAULT = {
+    ModestSession: (43, 1_146_670_264, "acf4eb1fba9078cb"),
+    DSGDSession: (4, 48_097_336, "dcca482499348fa4"),
+    GossipSession: (47, 1_180_287_864, "889562fcca0b589b"),
+}
+
+
+@pytest.mark.parametrize("session_cls",
+                         [ModestSession, DSGDSession, GossipSession])
+def test_fault_none_byte_identical_to_pr4(session_cls):
+    sess = session_cls(profile=diurnal_profile(n=64, seed=5), fault=None)
+    res = sess.run(240.0)
+    got = (res.rounds_completed, res.usage["total_bytes"],
+           _fingerprint(res))
+    assert got == GOLDEN_PR4_NOFAULT[session_cls], (
+        "a fault=None session diverged from the pre-fault-fabric golden "
+        "trajectory — fault injection must be zero-cost-by-default; if "
+        "this change is deliberate, update GOLDEN_PR4_NOFAULT and "
+        "document why in the commit message")

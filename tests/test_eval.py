@@ -84,3 +84,29 @@ def test_unknown_algo_and_regime_raise():
         run_scenario(Scenario(algo="sgd??", regime="diurnal"))
     with pytest.raises(ValueError):
         Scenario(algo="modest", regime="lunar").profile()
+
+
+def test_scenario_matrix_fault_axis():
+    """Fault regimes compose with trace regimes as a matrix axis: rows
+    are tagged, schedules actually inject, and ratio keys distinguish
+    the faulty cells."""
+    out = scenario_matrix(algos=("modest", "gossip"),
+                          regimes=("homogeneous",),
+                          faults=(None, "lossy_wan"),
+                          n=16, seeds=(0,), duration=60.0, target_round=3)
+    assert len(out["rows"]) == 4
+    by_fault = {row["fault"] for row in out["rows"]}
+    assert by_fault == {"clean", "lossy_wan"}
+    for row in out["rows"]:
+        if row["fault"] == "lossy_wan":
+            assert row["fault_injections"] > 0
+        else:
+            assert row["fault_injections"] == 0
+    assert set(out["ratios"]) == {"homogeneous", "homogeneous+lossy_wan"}
+
+
+def test_unknown_fault_regime_raises():
+    from repro.eval import Scenario
+    with pytest.raises(ValueError):
+        Scenario(algo="modest", regime="diurnal",
+                 fault="gremlins").fault_schedule()

@@ -1,0 +1,432 @@
+"""Fault-injection fabric (`repro.sim.fault`): primitive semantics, seeded
+determinism, delivery-vs-offline tie-breaking, and the two protocol
+hardenings injection surfaced (duplicate-model dedup in aggregation,
+trainer-side aggregator failover after death-post-sample)."""
+
+import dataclasses
+
+import pytest
+
+from repro.config import ModestConfig, TrainConfig
+from repro.core import messages as M
+from repro.core.node import ModestNode
+from repro.core.tasks import AbstractTask
+from repro.sim.clock import Simulator
+from repro.sim.fault import (AggregatorKill, Drop, Duplicate, FaultInjector,
+                             FaultSchedule, Jitter, LatencySpike, Partition,
+                             Straggler)
+from repro.sim.network import Network
+from repro.sim.runner import DSGDSession, GossipSession, ModestSession
+
+MCFG = ModestConfig(n_nodes=20, sample_size=4, n_aggregators=2,
+                    success_fraction=1.0, ping_timeout=1.0,
+                    activity_window=20)
+TASK = AbstractTask(model_bytes_=100_000)
+
+
+class _Sink:
+    """Minimal registered endpoint: records every delivered message."""
+
+    def __init__(self, node_id):
+        self.node_id = node_id
+        self.online = True
+        self.got = []
+
+    def receive(self, msg):
+        self.got.append(msg)
+
+
+class _Harness:
+    """Bare sim + network + injector (no protocol), for primitive tests."""
+
+    def __init__(self, rules, *, n=4, seed=0, contention=True):
+        self.sim = Simulator()
+        self.net = Network(self.sim, n, bandwidth=1e6, contention=contention)
+        self.nodes = {}
+        for i in range(n):
+            sink = _Sink(str(i))
+            self.net.register(sink)
+            self.nodes[str(i)] = sink
+        self.injector = FaultInjector(FaultSchedule(rules=rules, seed=seed),
+                                      self)
+        self.injector.install(1e9)
+
+    # FaultInjector kill/rejoin hooks (unused by primitive tests)
+    def _trace_offline(self, nid):
+        self.nodes[nid].online = False
+
+    def _trace_online(self, nid):
+        self.nodes[nid].online = True
+
+
+def _ping(src="0"):
+    return M.Ping(sender=src, round_k=1)
+
+
+# ------------------------------------------------------------- primitives
+
+
+def test_drop_loses_messages_but_charges_sender():
+    h = _Harness([Drop(p=1.0)])
+    for _ in range(5):
+        h.net.send("0", "1", _ping())
+    h.sim.run(until=10.0)
+    assert h.nodes["1"].got == []
+    assert h.net.bytes_out["0"] == 5 * M.HEADER_BYTES   # lost in transit
+    assert h.net.bytes_in["1"] == 0
+    assert h.injector.stats["dropped"] == 5
+
+
+def test_drop_selectors_scope_loss_to_link_kind_window():
+    h = _Harness([Drop(p=1.0, src=("0",), dst=("1",), kinds=("Ping",),
+                       t0=0.0, t1=5.0)])
+    h.net.send("0", "1", _ping())              # matches: dropped
+    h.net.send("0", "1", M.Pong(sender="0", round_k=1))   # kind mismatch
+    h.net.send("2", "1", _ping("2"))           # src mismatch
+    h.sim.schedule(6.0, lambda: h.net.send("0", "1", _ping()))  # after t1
+    h.sim.run(until=10.0)
+    kinds = [type(m).__name__ for m in h.nodes["1"].got]
+    assert sorted(kinds) == ["Ping", "Ping", "Pong"]
+
+
+def test_duplicate_delivers_twice_and_charges_twice():
+    h = _Harness([Duplicate(p=1.0, gap=0.5)])
+    h.net.send("0", "1", _ping())
+    h.sim.run(until=10.0)
+    assert len(h.nodes["1"].got) == 2
+    # spurious retransmission is real traffic: sender pays for both copies
+    assert h.net.bytes_out["0"] == 2 * M.HEADER_BYTES
+    assert h.net.bytes_in["1"] == 2 * M.HEADER_BYTES
+    assert h.net.msgs_by_type["Ping"] == 2
+
+
+def test_jitter_bounds_reordering():
+    """Jittered arrivals stay within max_delay of the clean analytic
+    delivery time, so reordering is bounded: a message can be overtaken
+    only by messages sent less than max_delay earlier."""
+    for seed in range(5):
+        h = _Harness([Jitter(max_delay=0.3)], seed=seed)
+        lat = (h.net.latency("0", "1")
+               + h.net.transfer_time("0", "1", M.HEADER_BYTES))
+        arrivals = []
+        orig = h.nodes["1"].receive
+        h.nodes["1"].receive = lambda m: (arrivals.append(h.sim.now),
+                                          orig(m))
+        h.net.send("0", "1", _ping())
+        h.sim.run(until=10.0)
+        assert len(arrivals) == 1
+        assert lat - 1e-12 <= arrivals[0] <= lat + 0.3 + 1e-12
+
+
+def test_latency_spike_window():
+    h = _Harness([LatencySpike(extra=2.0, t0=0.0, t1=1.0)])
+    times = []
+    orig = h.nodes["1"].receive
+    h.nodes["1"].receive = lambda m: (times.append(h.sim.now), orig(m))
+    lat = (h.net.latency("0", "1")
+           + h.net.transfer_time("0", "1", M.HEADER_BYTES))
+    h.net.send("0", "1", _ping())                       # inside window
+    h.sim.schedule(5.0, lambda: h.net.send("0", "1", _ping()))  # outside
+    h.sim.run(until=20.0)
+    assert times == pytest.approx([lat + 2.0, 5.0 + lat])
+
+
+def test_partition_cuts_cross_group_traffic_then_heals():
+    h = _Harness([Partition(groups=(("0", "1"),), t0=0.0, t1=5.0)])
+    h.net.send("0", "2", _ping())          # crosses the cut: dropped
+    h.net.send("0", "1", _ping())          # same group: delivered
+    h.sim.schedule(6.0, lambda: h.net.send("0", "2", _ping()))  # healed
+    h.sim.run(until=10.0)
+    assert len(h.nodes["1"].got) == 1
+    assert len(h.nodes["2"].got) == 1      # only the post-heal copy
+    assert h.injector.stats["partitioned"] == 1
+
+
+def test_partition_aborts_inflight_flows_crossing_cut():
+    """A model transfer mid-flight when the cut lands must die with it
+    (abort_flows), not sail through the partition window."""
+    h = _Harness([Partition(groups=(("0",),), t0=1.0, t1=50.0)])
+    big = M.TrainMsg(sender="0", round_k=1,
+                     model=M.ModelPayload(nbytes=2_000_000), view=None)
+    h.net.send("0", "1", big)              # ~2 s transfer at 1 MB/s
+    h.sim.run(until=60.0)
+    assert h.nodes["1"].got == []
+    assert h.net.flows_aborted >= 1
+    assert h.injector.stats["flows_severed"] >= 1
+
+
+def test_partition_blocks_flow_starting_inside_window():
+    """A payload sent just before t0 whose flow would *start* inside the
+    window (propagation delay) must not sneak through the cut."""
+    h = _Harness([Partition(groups=(("0",),), t0=0.001, t1=50.0)])
+    lat = h.net.latency("0", "1")
+    assert lat > 0.001                     # flow starts after the cut
+    big = M.TrainMsg(sender="0", round_k=1,
+                     model=M.ModelPayload(nbytes=2_000_000), view=None)
+    h.net.send("0", "1", big)
+    h.sim.run(until=60.0)
+    assert h.nodes["1"].got == []
+    assert h.net.flows_aborted >= 1
+
+
+def test_straggler_slows_then_restores_speed():
+    sched = FaultSchedule(rules=(Straggler(nodes=("3",), factor=4.0,
+                                           t0=10.0, t1=20.0),), seed=0)
+    s = ModestSession(n_nodes=8, mcfg=MCFG, task=TASK, seed=0, fault=sched)
+    base = s.nodes["3"].train_speed
+    s.sim.run(until=5.0)
+    assert s.nodes["3"].train_speed == base
+    s.fault_injector.install(100.0)
+    s.sim.run(until=15.0)
+    assert s.nodes["3"].train_speed == pytest.approx(4.0 * base)
+    s.sim.run(until=25.0)
+    assert s.nodes["3"].train_speed == base      # restored exactly
+
+
+def test_schedule_is_seed_deterministic():
+    def stats(seed):
+        h = _Harness([Drop(p=0.3), Duplicate(p=0.3), Jitter(max_delay=0.1)],
+                     seed=seed)
+        for i in range(200):
+            h.net.send(str(i % 3), "3", _ping(str(i % 3)))
+        h.sim.run(until=50.0)
+        return dict(h.injector.stats), len(h.nodes["3"].got)
+
+    assert stats(7) == stats(7)
+    assert stats(7) != stats(8)        # and the seed actually matters
+
+
+def test_zero_cost_when_no_fault_attached():
+    """fault=None leaves the network object on the pre-fault path (the
+    byte-identical golden proof lives in test_determinism.py)."""
+    s = ModestSession(n_nodes=6, mcfg=MCFG, task=TASK, seed=0)
+    assert s.fault_injector is None and s.net.fault is None
+    res = s.run(30.0)
+    assert res.fault_stats == {} and res.rounds_completed > 0
+
+
+# ------------------------------------------- delivery-vs-offline tie-break
+
+
+@pytest.mark.parametrize("session_cls",
+                         [ModestSession, DSGDSession, GossipSession])
+def test_offline_beats_delivery_on_shared_timestamp(session_cls):
+    """When a message arrival and a churn-offline event share a timestamp,
+    the offline transition wins and the message is dropped. This is pinned
+    by schedule order: AvailabilityDriver (and the fault injector) install
+    their events before any protocol traffic is scheduled, and the event
+    queue breaks time ties by insertion sequence."""
+    kw = dict(n_nodes=6, task=TASK, seed=0)
+    if session_cls is ModestSession:
+        kw["mcfg"] = MCFG
+    s = session_cls(**kw)
+    msg = _ping()
+    t_deliver = (s.net.latency("0", "1")
+                 + s.net.transfer_time("0", "1", msg.size_bytes()))
+    received = []
+    node = s.nodes["1"]
+    orig = node.receive
+    node.receive = lambda m: (received.append(m), orig(m))
+
+    # churn scheduled BEFORE the send: same timestamp -> offline wins
+    s.sim.schedule(t_deliver, lambda: s._trace_offline("1"))
+    s.net.send("0", "1", msg)
+    s.sim.run(until=t_deliver)
+    assert msg not in received
+
+    # mirror: delivery scheduled before the (equal-time) churn -> delivered
+    s._trace_online("1")
+    msg2 = _ping()
+    t2 = s.sim.now + t_deliver
+    s.net.send("0", "1", msg2)
+    s.sim.schedule(t_deliver, lambda: s._trace_offline("1"))
+    s.sim.run(until=t2)
+    assert msg2 in received
+
+
+# --------------------------------------------------- protocol regressions
+
+
+def _bare_node(mcfg):
+    sim = Simulator()
+    net = Network(sim, 4)
+    node = ModestNode("0", sim, net, mcfg, TrainConfig(),
+                      AbstractTask(model_bytes_=1000))
+    node.bootstrap(["0", "1", "2", "3"])
+    return sim, node
+
+
+def test_duplicate_model_not_aggregated_twice():
+    """Regression (duplicate-delivery fault): two copies of the same
+    sender's model for one round must count once toward sf·s, or the
+    average silently double-weights the duplicated node."""
+    mcfg = ModestConfig(n_nodes=4, sample_size=2, success_fraction=1.0,
+                        ping_timeout=1.0)
+    _, node = _bare_node(mcfg)
+    msg = M.AggregateMsg(sender="1", round_k=5,
+                         model=M.ModelPayload(nbytes=1000), view=None)
+    node.receive(msg)
+    node.receive(msg)                       # duplicated in transit
+    assert 5 not in node._agg_models_done   # threshold (2) NOT met by dup
+    assert node.dup_models_dropped == 1
+    node.receive(M.AggregateMsg(sender="2", round_k=5,
+                                model=M.ModelPayload(nbytes=1000), view=None))
+    assert 5 in node._agg_models_done       # distinct senders aggregate
+    assert node.agg_log == [(5, ("1", "2"))]
+
+
+def test_agg_log_senders_unique_under_duplication_storm():
+    sched = FaultSchedule(rules=(Duplicate(p=0.5, gap=0.3),), seed=3)
+    s = ModestSession(n_nodes=12, mcfg=MCFG, task=TASK, seed=1, fault=sched)
+    res = s.run(120.0)
+    assert res.rounds_completed > 5
+    assert res.fault_stats["duplicated"] > 50
+    dropped = sum(n.dup_models_dropped for n in s.nodes.values())
+    assert dropped > 0                       # the guard actually fired
+    for node in s.nodes.values():
+        for k, senders in node.agg_log:
+            assert len(senders) == len(set(senders)), (node.node_id, k)
+
+
+def test_aggregator_death_post_sample_wedges_without_failover():
+    """Regression (paper §4 failover): with one trainer and one
+    aggregator per round, killing the designated aggregator the moment
+    the trained model goes on the wire wedges the legacy protocol
+    permanently; trainer-side failover re-samples A^{k+1} (excluding the
+    dead node) and keeps the session live."""
+    base = ModestConfig(n_nodes=20, sample_size=1, n_aggregators=1,
+                        success_fraction=1.0, ping_timeout=1.0,
+                        activity_window=30)
+    kill = FaultSchedule(rules=(AggregatorKill(round_k=4,
+                                               rejoin_after=None),), seed=0)
+
+    def run(failover):
+        mcfg = dataclasses.replace(base, failover=failover)
+        s = ModestSession(n_nodes=20, mcfg=mcfg, task=TASK, seed=0,
+                          fault=kill)
+        res = s.run(300.0)
+        return res, sum(n.failovers for n in s.nodes.values())
+
+    wedged, fov0 = run(failover=False)
+    assert wedged.fault_stats["aggregator_kills"] == 1
+    assert wedged.rounds_completed <= 4 and fov0 == 0     # the old bug
+
+    live, fov1 = run(failover="auto")     # auto = on, fault fabric attached
+    assert live.rounds_completed > wedged.rounds_completed + 20
+    assert fov1 > 0
+
+
+def test_failover_rejoined_aggregator_rejoins_cleanly():
+    """Kill + Alg.-2 rejoin: the killed aggregator comes back, is
+    re-registered, and the session keeps progressing."""
+    sched = FaultSchedule(rules=(AggregatorKill(round_k=3, rejoin_after=10.0),),
+                          seed=0)
+    s = ModestSession(n_nodes=16, mcfg=MCFG, task=TASK, seed=0, fault=sched)
+    res = s.run(180.0)
+    assert res.fault_stats["aggregator_kills"] == 1
+    assert all(n.online for n in s.nodes.values())
+    assert res.rounds_completed > 30
+
+
+def test_rounds_progress_under_bounded_loss():
+    """Liveness: 20% loss + jitter + occasional retransmits still lets
+    MoDeST complete rounds *throughout* the horizon (sampler retries +
+    stall aggregation + failover compose — no wedge, though each lost
+    ping costs a Δt timeout so rounds are legitimately slower; the
+    conformance suite randomizes this further)."""
+    mcfg = dataclasses.replace(MCFG, sample_size=5, success_fraction=0.6)
+    sched = FaultSchedule(rules=(Drop(p=0.2), Jitter(max_delay=0.2),
+                                 Duplicate(p=0.1)), seed=4)
+    res = ModestSession(n_nodes=16, mcfg=mcfg, task=TASK, seed=0,
+                        fault=sched).run(150.0)
+    assert res.rounds_completed >= 15
+    # sustained progress, not a fast start that wedges: rounds complete
+    # in the last third of the horizon too
+    assert any(t > 100.0 for t, _ in res.round_times)
+
+
+def test_two_run_determinism_with_faults():
+    import hashlib
+    import json
+
+    sched = FaultSchedule(rules=(Drop(p=0.15), Duplicate(p=0.1),
+                                 Jitter(max_delay=0.25),
+                                 Straggler(nodes=3, factor=5.0, t0=20,
+                                           t1=60)), seed=9)
+
+    def fingerprint():
+        s = ModestSession(n_nodes=14, mcfg=MCFG, task=TASK, seed=2,
+                          fault=sched)
+        res = s.run(120.0)
+        blob = json.dumps({"rt": res.round_times, "usage": res.usage,
+                           "fault": res.fault_stats}, sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    assert fingerprint() == fingerprint()
+
+
+def test_dsgd_duplicate_model_not_averaged_twice():
+    """Regression: the D-SGD ring has exactly one in-neighbor per round;
+    a duplicated delivery must not double-weight that neighbor in the
+    synchronous average."""
+    sched = FaultSchedule(rules=(Duplicate(p=0.6, gap=0.2),), seed=2)
+    s = DSGDSession(n_nodes=8, task=TASK, seed=0, fault=sched)
+    res = s.run(60.0)
+    assert res.fault_stats["duplicated"] > 10
+    dropped = sum(n.dup_models_dropped for n in s.nodes.values())
+    assert dropped > 0
+    for node in s.nodes.values():
+        for k, senders in node.agg_log:
+            assert len(senders) == len(set(senders)), (node.node_id, k)
+
+
+def test_straggler_windows_nest_and_restore_exactly():
+    """Overlapping straggler windows compose multiplicatively and the
+    last one to end restores the exact original speed."""
+    sched = FaultSchedule(rules=(
+        Straggler(nodes=("3",), factor=4.0, t0=10.0, t1=30.0),
+        Straggler(nodes=("3",), factor=2.0, t0=20.0, t1=50.0)), seed=0)
+    s = ModestSession(n_nodes=8, mcfg=MCFG, task=TASK, seed=0, fault=sched)
+    base = s.nodes["3"].train_speed
+    s.fault_injector.install(100.0)
+    s.sim.run(until=15.0)
+    assert s.nodes["3"].train_speed == pytest.approx(4.0 * base)
+    s.sim.run(until=25.0)
+    assert s.nodes["3"].train_speed == pytest.approx(8.0 * base)
+    s.sim.run(until=35.0)          # first window ended, second still live
+    assert s.nodes["3"].train_speed == pytest.approx(2.0 * base)
+    s.sim.run(until=55.0)
+    assert s.nodes["3"].train_speed == base      # exact, not approx
+
+
+def test_fedavg_failover_stays_centralized():
+    """Regression: failover must not fire in FL-emulation mode — a
+    decentralized re-sample would spawn rogue aggregators inside the
+    centralized baseline. The churn-exempt server needs no failover."""
+    from repro.sim.runner import fedavg_session
+
+    sched = FaultSchedule(rules=(Drop(p=0.05),), seed=1)
+    mcfg = ModestConfig(n_nodes=16, sample_size=4, ping_timeout=1.0,
+                        activity_window=20)
+    s = fedavg_session(n_nodes=16, mcfg=mcfg, task=TASK, seed=0, fault=sched)
+    res = s.run(200.0)
+    assert res.rounds_completed > 10
+    assert sum(n.failovers for n in s.nodes.values()) == 0
+    server = s._fixed_id
+    rogue = [n.node_id for n in s.nodes.values()
+             if n.node_id != server and n.agg_log]
+    assert rogue == [], f"non-server nodes aggregated: {rogue}"
+
+
+def test_acks_suppress_false_positive_failovers():
+    """A successful push is acked by the aggregator, cancelling the
+    trainer's failover watch: light loss must not trigger a storm of
+    spurious model re-sends (it did before receipt acks)."""
+    sched = FaultSchedule(rules=(Drop(p=0.02),), seed=6)
+    s = ModestSession(n_nodes=16, mcfg=MCFG, task=TASK, seed=0, fault=sched)
+    res = s.run(200.0)
+    assert res.rounds_completed > 50
+    failovers = sum(n.failovers for n in s.nodes.values())
+    assert failovers <= res.rounds_completed / 10, (
+        f"{failovers} failovers over {res.rounds_completed} rounds — "
+        "acks are not suppressing false positives")
