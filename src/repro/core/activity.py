@@ -4,59 +4,170 @@
 been active. Updates are monotone (MAX-merge), so estimates behave like
 logical clocks: they can lag the true round but never lead it.
 
-Like :class:`~repro.core.registry.Registry`, snapshots are copy-on-write:
-activity rides on every view, and at n = 1000 the eager per-send dict
-copy dominated message cost.
+Like :class:`~repro.core.registry.Registry`, the tracker is layered —
+an immutable population-wide *base* (session bootstrap) plus a per-node
+delta with copy-on-write snapshots — and keeps an incremental XOR
+``digest`` of its effective ``(j, k̂_j)`` entries so identical trackers
+merge in O(1). ``round_estimate`` is a maintained running max (updates
+are monotone and entries are never deleted), not an O(n) scan.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-from repro.core.registry import JOINED, Registry
+from repro.core.registry import JOINED, Registry, _Chain, _entry_hash
 
 
-@dataclass
+class _ActivityBase:
+    """Immutable population-wide layer shared by every node's tracker."""
+
+    __slots__ = ("latest", "digest", "max_val")
+
+    def __init__(self, latest: dict):
+        self.latest = latest
+        d = 0
+        for j, k in latest.items():
+            d ^= _entry_hash(j, k)
+        self.digest = d
+        self.max_val = max(latest.values()) if latest else None
+
+
 class ActivityTracker:
-    latest: Dict[str, int] = field(default_factory=dict)   # N_i: j -> k̂_j
-    _shared: bool = field(default=False, repr=False, compare=False)
+    __slots__ = ("_base", "_dl", "_digest", "_extra", "_max", "_shared")
+
+    def __init__(self, latest: Optional[dict] = None, _shared: bool = False):
+        self._base: Optional[_ActivityBase] = None
+        self._dl: Dict[str, int] = latest if latest is not None else {}
+        self._shared = _shared
+        self._extra = len(self._dl)
+        d = 0
+        for j, k in self._dl.items():
+            d ^= _entry_hash(j, k)
+        self._digest = d
+        self._max = max(self._dl.values()) if self._dl else None
+
+    @classmethod
+    def from_base(cls, latest: dict) -> "ActivityTracker":
+        t = cls.__new__(cls)
+        t._base = _ActivityBase(latest)
+        t._dl = {}
+        t._digest = t._base.digest
+        t._extra = 0
+        t._max = t._base.max_val
+        t._shared = False
+        return t
+
+    # ---- flat-dict compatible surface -------------------------------------
+
+    @property
+    def latest(self):
+        if self._base is None:
+            return self._dl
+        return _Chain(self._base.latest, self._dl, self._extra)
+
+    @property
+    def digest(self) -> int:
+        return self._digest
+
+    def __eq__(self, other):
+        if not isinstance(other, ActivityTracker):
+            return NotImplemented
+        return dict(self.latest) == dict(other.latest)
+
+    __hash__ = None
+
+    def __repr__(self):
+        return f"ActivityTracker(latest={dict(self.latest)!r})"
+
+    # ---- internals --------------------------------------------------------
 
     def _own(self) -> None:
         if self._shared:
-            self.latest = dict(self.latest)
+            self._dl = dict(self._dl)
             self._shared = False
+
+    def _get(self, j: str) -> Optional[int]:
+        k = self._dl.get(j)
+        if k is None and self._base is not None:
+            return self._base.latest.get(j)
+        return k
+
+    def _apply(self, j: str, k_hat: int, cur: Optional[int]) -> None:
+        self._own()
+        if cur is None:
+            self._extra += 1
+        else:
+            self._digest ^= _entry_hash(j, cur)
+        self._dl[j] = k_hat
+        self._digest ^= _entry_hash(j, k_hat)
+        if self._max is None or k_hat > self._max:
+            self._max = k_hat
+
+    # ---- Alg. 3 -----------------------------------------------------------
 
     def update(self, j: str, k_hat: int) -> None:
         """UPDATEACTIVITY — keep the max observed round for j."""
-        cur = self.latest.get(j)
+        cur = self._get(j)
         if cur is None or k_hat > cur:
-            self._own()
-            self.latest[j] = k_hat
+            self._apply(j, k_hat, cur)
 
     def merge(self, other: "ActivityTracker") -> None:
-        # MAX-merge, inlined: this runs once per received model message
-        # over every known node, so the per-entry cost matters at scale.
-        mine = self.latest
-        for j, k in other.latest.items():
-            cur = mine.get(j)
+        # MAX-merge. Identical trackers (the steady state for piggybacked
+        # views) short-circuit on digest equality; trackers sharing our
+        # base layer walk only the sender's delta.
+        if other._digest == self._digest:
+            return
+        ob = other._base
+        if ob is not None and ob is self._base:
+            src = other._dl.items()
+        else:
+            src = other.latest.items()
+        for j, k in src:
+            cur = self._get(j)
             if cur is None or k > cur:
-                self._own()
-                mine = self.latest
-                mine[j] = k
+                self._apply(j, k, cur)
 
     def round_estimate(self) -> int:
         """k̂ — max round observed from anyone (Alg. 2, l.25)."""
-        return max(self.latest.values(), default=0)
+        return self._max if self._max is not None else 0
 
-    def candidates(self, registry: Registry, round_k: int, window: int) -> List[str]:
-        """CANDIDATES(k) — registered AND active within the last Δk rounds."""
+    def candidates(self, registry: Registry, round_k: int,
+                   window: int) -> List[str]:
+        """CANDIDATES(k) — registered AND active within the last Δk rounds.
+
+        Once ``round_k`` outruns the base layer's activity rounds (true
+        for any bootstrapped session past its first Δk rounds), no base
+        entry can qualify on its own and only the delta — nodes actually
+        observed active — is scanned: O(active), not O(population)."""
         floor = round_k - window
-        events = registry.events
-        return [j for j, k in self.latest.items()
-                if k > floor and events.get(j) == JOINED]
+        dl = self._dl
+        base = self._base
+        out = []
+        if (base is not None and base.max_val is not None
+                and base.max_val > floor):
+            bl = base.latest
+            for j, k in bl.items():
+                if dl.get(j, k) > floor and registry._event_of(j) == JOINED:
+                    out.append(j)
+            for j, k in dl.items():
+                if k > floor and j not in bl \
+                        and registry._event_of(j) == JOINED:
+                    out.append(j)
+        else:
+            for j, k in dl.items():
+                if k > floor and registry._event_of(j) == JOINED:
+                    out.append(j)
+        return out
 
     def snapshot(self) -> "ActivityTracker":
         """O(1) copy-on-write snapshot."""
         self._shared = True
-        return ActivityTracker(self.latest, _shared=True)
+        t = ActivityTracker.__new__(ActivityTracker)
+        t._base = self._base
+        t._dl = self._dl
+        t._digest = self._digest
+        t._extra = self._extra
+        t._max = self._max
+        t._shared = True
+        return t

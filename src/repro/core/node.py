@@ -17,6 +17,7 @@ network refusing delivery to ``online=False`` nodes.
 from __future__ import annotations
 
 import math
+from itertools import islice
 from typing import Callable, List, Optional
 
 from repro.config import ModestConfig, TrainConfig
@@ -38,6 +39,11 @@ class ModestNode:
         self.node_id = node_id
         self.sim = sim
         self.net = net
+        # Hot per-node state (online flag, train-seconds accounting) lives
+        # in the population's struct-of-arrays columns; the attributes
+        # below are properties over this row (repro.sim.soa).
+        self._pop = net.state
+        self._row = net.state.ensure(node_id)
         self.mcfg = mcfg
         self.tcfg = tcfg
         self.task = task
@@ -92,6 +98,29 @@ class ModestNode:
 
         net.register(self)
         self._schedule_rejoin_check()
+
+    # ---- SoA-backed hot state (see repro.sim.soa.PopulationState) ----------
+
+    @property
+    def online(self) -> bool:
+        return bool(self._pop.online[self._row])
+
+    @online.setter
+    def online(self, value: bool) -> None:
+        self._pop.online[self._row] = bool(value)
+
+    @property
+    def train_seconds(self) -> float:
+        return float(self._pop.train_seconds[self._row])
+
+    @train_seconds.setter
+    def train_seconds(self, value: float) -> None:
+        self._pop.train_seconds[self._row] = value
+
+    @property
+    def view_digest(self) -> int:
+        """Stable 64-bit digest of this node's membership view."""
+        return self.registry.digest ^ self.activity.digest
 
     # ------------------------------------------------------------------ utils
 
@@ -186,8 +215,12 @@ class ModestNode:
             if self.online:
                 idle = self.sim.now - self._last_active_t
                 if idle > self.mcfg.activity_window * self._round_time_est:
-                    peers = [j for j in self.registry.registered()
-                             if j != self.node_id][: self.mcfg.sample_size]
+                    # lazy scan: O(sample_size), not O(population) — at
+                    # n = 100k the eager registered() list dominated the
+                    # periodic check's cost
+                    peers = list(islice(
+                        (j for j in self.registry.iter_registered()
+                         if j != self.node_id), self.mcfg.sample_size))
                     if peers:
                         self.request_join(peers)
                         self._last_active_t = self.sim.now

@@ -70,10 +70,23 @@ class Sampler:
         already tried, otherwise the deterministic hash order would hand
         back the same (possibly wedged) node every time."""
         exclude = frozenset(exclude)
-        cands = self.node.candidates(round_k)
-        if exclude:
-            cands = [c for c in cands if c not in exclude]
-        order = sample_order(cands, round_k)
+        state = getattr(self.node.net, "state", None)
+        if state is not None and hasattr(self.node, "registry"):
+            # Population-level memo: every node with the same membership
+            # view derives the same hashed order (the point of Alg. 1),
+            # so the candidate scan + sort runs once per (view, round)
+            # equivalence class, not once per SAMPLE() call. Filtering
+            # the cached order afterwards is equivalent to filtering the
+            # candidates first: the hash order is a total order on node
+            # ids, so dropping excluded entries preserves it exactly.
+            order = state.sample_order_for(self.node, round_k)
+            if exclude:
+                order = [c for c in order if c not in exclude]
+        else:
+            cands = self.node.candidates(round_k)
+            if exclude:
+                cands = [c for c in cands if c not in exclude]
+            order = sample_order(cands, round_k)
         st = _PendingSample(next(self._tokens), round_k, size, cont, order,
                             retries=_retries, exclude=exclude)
         self._pending[st.token] = st

@@ -79,17 +79,34 @@ class Network:
     ``contention=False`` restores the legacy semantics where every flow
     gets the full ``min(uplink[src], downlink[dst])`` regardless of
     concurrency.
+
+    ``contention="approx"`` keeps the exact progressive-filling path for
+    small components but switches to a vectorized, level-capped
+    approximate max-min fill once a component reaches
+    ``approx_threshold`` flows (see :meth:`_fill_approx` and
+    docs/SCALE.md). The exact path stays the default and stays
+    golden-pinned — the approximation is strictly opt-in, the same
+    zero-cost-by-default contract as ``engine="sequential"`` and
+    ``fault=None``.
     """
 
     def __init__(self, sim, n_nodes: int, *, latency: Optional[np.ndarray] = None,
                  bandwidth: float = 20e6, uplink: Optional[np.ndarray] = None,
                  downlink: Optional[np.ndarray] = None,
                  city: Optional[np.ndarray] = None, seed: int = 0,
-                 contention: bool = True, min_flow_bytes: int = 4096):
+                 contention=True, min_flow_bytes: int = 4096,
+                 approx_threshold: int = 64, approx_levels: int = 12):
+        from repro.sim.soa import PopulationState
+
         self.sim = sim
         self.bandwidth = bandwidth   # bytes/s (paper: WAN uplink)
         self.contention = contention
         self.min_flow_bytes = min_flow_bytes
+        self.approx_threshold = approx_threshold
+        self.approx_levels = approx_levels
+        # struct-of-arrays hot state (status, capacity cache, train
+        # accounting) shared with the session's nodes — see repro.sim.soa
+        self.state = PopulationState(n_nodes)
         self._uplink = None if uplink is None else np.asarray(uplink, float)
         self._downlink = (None if downlink is None
                           else np.asarray(downlink, float))
@@ -105,10 +122,10 @@ class Network:
         self._out: Dict[str, Dict[_Flow, None]] = defaultdict(dict)
         self._in: Dict[str, Dict[_Flow, None]] = defaultdict(dict)
         self._cap_override: Dict[str, tuple] = {}    # nid -> (up, down)
-        self._cap_cache: Dict[str, tuple] = {}       # nid -> (up, down)
         self.flows_completed = 0
         self.flows_aborted = 0
         self.reallocations = 0
+        self.approx_fills = 0        # reallocations served by _fill_approx
         # accounting
         self.bytes_out = defaultdict(int)
         self.bytes_in = defaultdict(int)
@@ -119,20 +136,25 @@ class Network:
     fault = None        # set by sim.fault.FaultInjector; None = clean fabric
 
     @classmethod
-    def from_profile(cls, sim, profile, *, contention: bool = True,
-                     min_flow_bytes: int = 4096) -> "Network":
+    def from_profile(cls, sim, profile, *, contention=True,
+                     min_flow_bytes: int = 4096,
+                     approx_threshold: int = 64,
+                     approx_levels: int = 12) -> "Network":
         """Build the fabric from a TraceProfile; latency and capacity
         queries delegate to the profile so the semantics live in one
         place (the raw-array constructor path remains for ad-hoc use)."""
         net = cls(sim, profile.n, latency=profile.latency,
                   uplink=profile.uplink, downlink=profile.downlink,
                   city=profile.city, seed=profile.seed,
-                  contention=contention, min_flow_bytes=min_flow_bytes)
+                  contention=contention, min_flow_bytes=min_flow_bytes,
+                  approx_threshold=approx_threshold,
+                  approx_levels=approx_levels)
         net._profile = profile
         return net
 
     def register(self, node) -> None:
         self.nodes[node.node_id] = node
+        self.state.ensure(node.node_id)
 
     def latency(self, src: str, dst: str) -> float:
         if self._profile is not None:
@@ -158,19 +180,29 @@ class Network:
     # ---- capacity queries -------------------------------------------------
 
     def node_uplink(self, nid: str) -> float:
-        """Total upstream bytes/s of one node (shared by its outgoing flows)."""
-        c = self._cap_cache.get(nid)
-        if c is None:
-            c = self._cap_cache[nid] = (self._uplink_of(nid),
-                                        self._downlink_of(nid))
-        return c[0]
+        """Total upstream bytes/s of one node (shared by its outgoing
+        flows). Cached in the SoA capacity columns; ``set_node_capacity``
+        invalidates a row rather than a dict entry."""
+        st = self.state
+        row = st.index.get(nid)
+        if row is None:
+            row = st.ensure(nid)
+        if not st.cap_valid[row]:
+            st.uplink[row] = self._uplink_of(nid)
+            st.downlink[row] = self._downlink_of(nid)
+            st.cap_valid[row] = True
+        return float(st.uplink[row])
 
     def node_downlink(self, nid: str) -> float:
-        c = self._cap_cache.get(nid)
-        if c is None:
-            c = self._cap_cache[nid] = (self._uplink_of(nid),
-                                        self._downlink_of(nid))
-        return c[1]
+        st = self.state
+        row = st.index.get(nid)
+        if row is None:
+            row = st.ensure(nid)
+        if not st.cap_valid[row]:
+            st.uplink[row] = self._uplink_of(nid)
+            st.downlink[row] = self._downlink_of(nid)
+            st.cap_valid[row] = True
+        return float(st.downlink[row])
 
     def _uplink_of(self, nid: str) -> float:
         ov = self._cap_override.get(nid)
@@ -215,7 +247,7 @@ class Network:
         old = self._cap_override.get(nid, (None, None))
         self._cap_override[nid] = (uplink if uplink is not None else old[0],
                                    downlink if downlink is not None else old[1])
-        self._cap_cache.pop(nid, None)
+        self.state.invalidate_capacity(nid)
         if self.contention:
             self._reallocate((("u", nid), ("d", nid)))
 
@@ -223,7 +255,7 @@ class Network:
         """Remove any :meth:`set_node_capacity` override, reverting the
         node to its profile/array capacity, and refit in-flight flows."""
         if self._cap_override.pop(nid, None) is not None:
-            self._cap_cache.pop(nid, None)
+            self.state.invalidate_capacity(nid)
             if self.contention:
                 self._reallocate((("u", nid), ("d", nid)))
 
@@ -406,10 +438,12 @@ class Network:
         return list(flows)
 
     def _reallocate(self, seed_resources, seed_flows=()) -> None:
-        """Progressive filling (exact max-min fair share) over the affected
-        component: repeatedly find the most-loaded resource (a node's up or
-        down direction), freeze its flows at the equal share, give leftover
-        capacity back, repeat. Then reschedule every completion event."""
+        """Recompute fair rates over the affected component, then
+        reschedule every completion event. The fill itself is either the
+        exact progressive-filling pass (:meth:`_fill_exact`, default) or
+        — under ``contention="approx"`` for components of at least
+        ``approx_threshold`` flows — the level-capped vectorized
+        approximation (:meth:`_fill_approx`)."""
         flows = self._component(seed_resources, seed_flows)
         if not flows:
             return
@@ -421,6 +455,27 @@ class Network:
                 f.remaining = max(0.0, f.remaining - f.rate * (now - f.t_last))
             f.t_last = now
             old_rate.append(f.rate)
+        if (self.contention == "approx"
+                and len(flows) >= self.approx_threshold):
+            self.approx_fills += 1
+            self._fill_approx(flows)
+        else:
+            self._fill_exact(flows)
+        for f, old in zip(flows, old_rate):
+            if f.rate == old and f.handle is not None:
+                continue       # unchanged rate: the old event is still right
+            if f.handle is not None:
+                f.handle.cancel()
+            eta = (0.0 if not math.isfinite(f.rate)
+                   else f.remaining / f.rate if f.rate > 0.0 else None)
+            f.handle = (None if eta is None
+                        else self.sim.schedule(eta,
+                                               lambda f=f: self._complete(f)))
+
+    def _fill_exact(self, flows) -> None:
+        """Progressive filling (exact max-min fair share): repeatedly find
+        the most-loaded resource (a node's up or down direction), freeze
+        its flows at the equal share, give leftover capacity back, repeat."""
         # resources: ("u", node) = uplink, ("d", node) = downlink
         cap: Dict[tuple, float] = {}
         users: Dict[tuple, list] = {}
@@ -465,16 +520,99 @@ class Network:
                     other = ("d", f.dst) if r[0] == "u" else ("u", f.src)
                     if other in cap and other != r:
                         cap[other] = max(0.0, cap[other] - share)
-        for f, old in zip(flows, old_rate):
-            if f.rate == old and f.handle is not None:
-                continue       # unchanged rate: the old event is still right
-            if f.handle is not None:
-                f.handle.cancel()
-            eta = (0.0 if not math.isfinite(f.rate)
-                   else f.remaining / f.rate if f.rate > 0.0 else None)
-            f.handle = (None if eta is None
-                        else self.sim.schedule(eta,
-                                               lambda f=f: self._complete(f)))
+
+    def _fill_approx(self, flows) -> None:
+        """Level-capped vectorized max-min: run at most ``approx_levels``
+        progressive-filling passes with numpy bincounts instead of the
+        per-flow Python loop, then give every still-unfrozen flow its
+        locally safe share ``min_r cap_r / live_r``.
+
+        Properties (tested in ``tests/test_network_invariants.py``):
+
+        * identical (up to float association) to the exact fill whenever
+          the component has at most ``approx_levels`` distinct bottleneck
+          levels — star-shaped protocol traffic typically has 1–3;
+        * always feasible: per-resource rate sums never exceed capacity,
+          because the tail assignment splits each resource's *remaining*
+          capacity over its remaining users;
+        * never strands a flow at rate 0: remaining capacity stays
+          positive for any resource with live users (same tie-tolerance
+          freeze as the exact pass), and tail rates inherit that;
+        * conservative: tail rates are never above the exact max-min
+          rates, so approximate completions are never early beyond float
+          noise — the documented ε is on throughput given up, not
+          capacity violated.
+        """
+        F = len(flows)
+        # resource table: finite node-directions touched by the component
+        res_index: Dict[tuple, int] = {}
+        caps: list = []
+        u_idx = np.empty(F, dtype=np.int64)
+        d_idx = np.empty(F, dtype=np.int64)
+        for i, f in enumerate(flows):
+            for arr, r, capf in ((u_idx, ("u", f.src), self.node_uplink),
+                                 (d_idx, ("d", f.dst), self.node_downlink)):
+                ri = res_index.get(r)
+                if ri is None:
+                    c = capf(r[1])
+                    if math.isfinite(c):
+                        ri = res_index[r] = len(caps)
+                        caps.append(c)
+                    else:
+                        ri = -1
+                        res_index[r] = -1
+                arr[i] = ri
+        R = len(caps)
+        rate = np.zeros(F)
+        frozen = np.zeros(F, dtype=bool)
+        if R == 0:
+            rate[:] = math.inf
+        else:
+            cap = np.asarray(caps, dtype=np.float64)
+            has_u, has_d = u_idx >= 0, d_idx >= 0
+            for _ in range(self.approx_levels):
+                live = ~frozen
+                cnt = (np.bincount(u_idx[live & has_u], minlength=R)
+                       + np.bincount(d_idx[live & has_d], minlength=R))
+                binding = cnt > 0
+                if not binding.any():
+                    rate[live] = math.inf     # no finite resource binds
+                    frozen[:] = True
+                    break
+                share_r = np.full(R, math.inf)
+                share_r[binding] = cap[binding] / cnt[binding]
+                best = share_r.min()
+                tol = best + 1e-9 * max(abs(best), 1.0)
+                tied = share_r <= tol
+                newly = live & ((has_u & tied[np.maximum(u_idx, 0)])
+                                | (has_d & tied[np.maximum(d_idx, 0)]))
+                share = max(best, 0.0)
+                rate[newly] = share
+                cap = np.maximum(
+                    0.0,
+                    cap - share * (
+                        np.bincount(u_idx[newly & has_u], minlength=R)
+                        + np.bincount(d_idx[newly & has_d], minlength=R)))
+                frozen |= newly
+                if frozen.all():
+                    break
+            tail = ~frozen
+            if tail.any():
+                # split each resource's remaining capacity over its
+                # remaining users — feasible by construction
+                live_cnt = (np.bincount(u_idx[tail & has_u], minlength=R)
+                            + np.bincount(d_idx[tail & has_d], minlength=R))
+                safe = np.full(R, math.inf)
+                nz = live_cnt > 0
+                safe[nz] = cap[nz] / live_cnt[nz]
+                t_rate = np.full(F, math.inf)
+                iu = tail & has_u
+                t_rate[iu] = np.minimum(t_rate[iu], safe[u_idx[iu]])
+                idn = tail & has_d
+                t_rate[idn] = np.minimum(t_rate[idn], safe[d_idx[idn]])
+                rate[tail] = t_rate[tail]
+        for i, f in enumerate(flows):
+            f.rate = float(rate[i])
 
     @property
     def active_flows(self) -> int:

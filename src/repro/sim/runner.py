@@ -20,10 +20,8 @@ import numpy as np
 
 from repro.config import ModestConfig, TrainConfig
 from repro.core import messages as M
-from repro.core.activity import ActivityTracker
 from repro.core.hashing import sample_order
 from repro.core.node import ModestNode
-from repro.core.registry import JOINED, Registry
 from repro.core.tasks import AbstractTask, LearningTask
 from repro.data.loader import FederatedData
 from repro.engine.cohort import make_engine
@@ -31,6 +29,7 @@ from repro.sim.churn import AvailabilityDriver
 from repro.sim.clock import Simulator
 from repro.sim.fault import FaultInjector
 from repro.sim.network import Network
+from repro.sim.soa import population_view
 
 
 def _fault_setup(session, fault):
@@ -188,12 +187,10 @@ class ModestSession:
             self._trace_offline, self._trace_online, network=self.net)
         offline_now.discard(fixed_id)
         # One shared bootstrap view, adopted copy-on-write by every node:
-        # building n separate n-entry registries made session construction
-        # O(n²) — the dominant startup cost at n = 1000.
-        base_reg, base_act = Registry(), ActivityTracker()
-        for nid in ids:
-            base_reg.update(nid, 1, JOINED)
-            base_act.update(nid, 0)
+        # a single immutable base layer (repro.sim.soa.population_view)
+        # under per-node deltas, so construction is O(n) and a node's
+        # first post-snapshot mutation copies O(delta), not O(n).
+        base_reg, base_act = population_view(ids)
         self.nodes: Dict[str, ModestNode] = {}
         for i, nid in enumerate(ids):
             node = ModestNode(
@@ -290,12 +287,31 @@ class ModestSession:
         node.recover()
         if node.data is not None:
             self.engine.register_client(nid, node.data)
-        peers = [j for j in self.nodes if j != nid]
-        if peers:
-            k = min(self.mcfg.sample_size, len(peers))
-            sel = list(self._churn_rng.choice(peers, size=k, replace=False))
+        # Uniform peer draw without materializing the O(n) peers list:
+        # numpy's choice over an int population consumes the rng stream
+        # identically to choice over the equivalent list, so drawing row
+        # indices and skipping self reproduces the legacy selection
+        # byte-for-byte (pinned by the golden trajectories).
+        ids, pos = self._peer_index()
+        i = pos.get(nid)
+        m = len(ids) - (1 if i is not None else 0)
+        if m > 0:
+            k = min(self.mcfg.sample_size, m)
+            drawn = self._churn_rng.choice(m, size=k, replace=False)
+            sel = [ids[j] if i is None or j < i else ids[j + 1]
+                   for j in drawn]
             node.request_join(sel)
         node._last_active_t = self.sim.now
+
+    def _peer_index(self):
+        """(ids list, id -> position) over the current population; nodes
+        are only ever added, so the cache is refreshed by length check."""
+        cached = getattr(self, "_peer_cache", None)
+        if cached is None or cached[2] != len(self.nodes):
+            ids = list(self.nodes)
+            cached = self._peer_cache = (
+                ids, {j: i for i, j in enumerate(ids)}, len(ids))
+        return cached[0], cached[1]
 
     def schedule_join(self, at: float, node_id: str, *, data_idx: int = 0) -> None:
         def do_join():
@@ -370,12 +386,36 @@ class ModestSession:
 # ---------------------------------------------------------------------------
 
 
-class _DSGDNode:
+class _SoANodeMixin:
+    """Baseline nodes keep their status/accounting in the population's
+    struct-of-arrays columns too, so scale tooling can query one array
+    regardless of protocol."""
+
+    @property
+    def online(self) -> bool:
+        return bool(self._pop.online[self._row])
+
+    @online.setter
+    def online(self, value: bool) -> None:
+        self._pop.online[self._row] = bool(value)
+
+    @property
+    def train_seconds(self) -> float:
+        return float(self._pop.train_seconds[self._row])
+
+    @train_seconds.setter
+    def train_seconds(self, value: float) -> None:
+        self._pop.train_seconds[self._row] = value
+
+
+class _DSGDNode(_SoANodeMixin):
     def __init__(self, node_id, session, data, speed):
         self.node_id = node_id
         self.session = session
         self.sim = session.sim
         self.net = session.net
+        self._pop = self.net.state
+        self._row = self._pop.ensure(node_id)
         self.data = data
         self.speed = speed
         self.online = True
@@ -573,12 +613,14 @@ class DSGDSession:
 # ---------------------------------------------------------------------------
 
 
-class _GossipNode:
+class _GossipNode(_SoANodeMixin):
     def __init__(self, node_id, session, data, speed, period):
         self.node_id = node_id
         self.session = session
         self.sim = session.sim
         self.net = session.net
+        self._pop = self.net.state
+        self._row = self._pop.ensure(node_id)
         self.data = data
         self.speed = speed
         self.period = period

@@ -1,9 +1,17 @@
 """Simulator clock semantics: until-boundary, early drain, cancellation,
-and max_events surfacing (a truncated run must not look converged)."""
+and max_events surfacing (a truncated run must not look converged).
+
+Plus the bucket/calendar-queue conformance layer: the default
+``queue="bucket"`` tier must emit events in an order *identical* to the
+reference ``queue="heap"`` tier on arbitrary schedules — including
+equal-timestamp ties, whose schedule-call ordering is the contract the
+churn driver and fault fabric rely on (PR 5)."""
 
 import warnings
 
+import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.sim.clock import Simulator
 
@@ -84,3 +92,103 @@ def test_max_events_budget_is_per_run():
     assert sim.exhausted and sim.events_processed == 4
     sim.run(until=100.0, max_events=100)   # the rest fits comfortably
     assert not sim.exhausted and sim.events_processed == 10
+
+
+# ---------------------------------------------------------- queue conformance
+
+
+def _trace(sim, delays, cancel_every=0):
+    """Schedule ``delays`` (tagged), run, return the firing order."""
+    fired = []
+    handles = []
+    for i, d in enumerate(delays):
+        handles.append(sim.schedule(d, lambda i=i: fired.append((sim.now, i))))
+    if cancel_every:
+        for h in handles[::cancel_every]:
+            h.cancel()
+    sim.run(until=max(delays, default=0.0) + 1.0)
+    return fired
+
+
+def test_queue_kinds_validated():
+    with pytest.raises(ValueError):
+        Simulator(queue="splay")
+    with pytest.raises(ValueError):
+        Simulator(bucket_width=0.0)
+    assert Simulator().queue_kind == "bucket"
+    assert Simulator(queue="heap").queue_kind == "heap"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_bucket_order_identical_to_heap_on_random_schedules(data):
+    """Arbitrary delays — duplicated timestamps on purpose (drawn from a
+    small grid as well as the continuum) and a cancellation comb — must
+    fire in the same (time, insertion) order under both tiers."""
+    n = data.draw(st.integers(min_value=1, max_value=60))
+    delays = []
+    for _ in range(n):
+        if data.draw(st.booleans()):
+            delays.append(data.draw(st.sampled_from(
+                [0.0, 0.25, 0.5, 1.0, 1.0, 2.5])))   # bucket-edge ties
+        else:
+            delays.append(data.draw(
+                st.floats(min_value=0.0, max_value=10.0)))
+    cancel_every = data.draw(st.sampled_from([0, 2, 3]))
+    width = data.draw(st.sampled_from([0.1, 0.25, 1.0, 7.0]))
+    a = _trace(Simulator(queue="heap"), delays, cancel_every)
+    b = _trace(Simulator(queue="bucket", bucket_width=width),
+               delays, cancel_every)
+    assert a == b
+
+
+def test_equal_timestamp_ties_fire_in_schedule_order_both_tiers():
+    """The PR-5 tie-break contract, on both tiers: same timestamp →
+    insertion order, even across bucket boundaries and re-runs."""
+    for kind in ("heap", "bucket"):
+        sim = Simulator(queue=kind)
+        fired = []
+        for i in range(20):
+            sim.schedule(1.0, lambda i=i: fired.append(i))
+        for i in range(20, 40):
+            sim.schedule(0.25, lambda i=i: fired.append(i))   # bucket edge
+        sim.run(until=5.0)
+        assert fired == list(range(20, 40)) + list(range(20)), kind
+
+
+def test_nested_scheduling_identical_across_tiers():
+    """Events that schedule more events (the simulator's actual workload:
+    completions trigger reallocations trigger completions) stay in
+    lockstep across tiers."""
+    def run(kind):
+        sim = Simulator(queue=kind)
+        fired = []
+
+        def spawn(depth, tag):
+            fired.append((round(sim.now, 9), tag))
+            if depth:
+                sim.schedule(0.4, lambda: spawn(depth - 1, tag * 2))
+                sim.schedule(0.4, lambda: spawn(depth - 1, tag * 2 + 1))
+
+        sim.schedule(0.0, lambda: spawn(5, 1))
+        sim.schedule(0.2, lambda: spawn(5, 100))
+        sim.run(until=10.0)
+        return fired
+
+    assert run("heap") == run("bucket")
+
+
+def test_two_run_determinism_at_ten_thousand_events():
+    """10k randomized events (heavy tie load: quantized delays) fire in
+    an identical order across two independently constructed bucket-queue
+    simulators, and identical to the heap reference."""
+    def run(kind, seed=7):
+        rng = np.random.default_rng(seed)
+        delays = np.round(rng.uniform(0.0, 50.0, size=10_000), 2)
+        sim = Simulator(queue=kind)
+        return _trace(sim, list(delays), cancel_every=5)
+
+    first = run("bucket")
+    assert len(first) == 8_000           # 2000 cancelled
+    assert first == run("bucket")
+    assert first == run("heap")

@@ -94,3 +94,28 @@ def test_fault_none_byte_identical_to_pr4(session_cls):
         "trajectory — fault injection must be zero-cost-by-default; if "
         "this change is deliberate, update GOLDEN_PR4_NOFAULT and "
         "document why in the commit message")
+
+
+# ---------------------------------------------------- event-queue differential
+
+
+@pytest.mark.parametrize("session_cls",
+                         [ModestSession, DSGDSession, GossipSession])
+def test_heap_queue_matches_golden(session_cls, monkeypatch):
+    """The bucketed calendar queue is the default event tier (PR 6); the
+    flat heap stays as the reference implementation. Both must reproduce
+    the pinned golden trajectory — i.e. the queue swap is invisible to
+    protocol semantics, not merely self-consistent."""
+    import repro.sim.runner as runner_mod
+    from repro.sim.clock import Simulator
+
+    monkeypatch.setattr(runner_mod, "Simulator",
+                        lambda: Simulator(queue="heap"))
+    sess = session_cls(profile=diurnal_profile(n=24, seed=3))
+    res = sess.run(180.0)
+    got = (res.rounds_completed, res.usage["total_bytes"],
+           _fingerprint(res))
+    assert got == GOLDEN[session_cls], (
+        "the heap reference queue diverged from the golden trajectory "
+        "that the default bucket queue reproduces — the two tiers no "
+        "longer emit identical event orders")

@@ -37,3 +37,28 @@ def test_thousand_node_modest_round_within_budget():
     # the three eval axes must be live at scale, too
     assert res.train_node_seconds > 0.0
     assert res.usage["total_bytes"] > 0
+
+
+# PR-6 tier: struct-of-arrays node state, bucketed event queue, layered
+# CRDT views and the population-level sample-order memo put n=10k within
+# interactive reach (current: ~1.5 s wall, ~16k events for 30 sim-s).
+WALL_BUDGET_10K_S = 30.0
+EVENT_BUDGET_10K = 200_000
+
+
+def test_ten_thousand_node_modest_round_within_budget():
+    t0 = time.monotonic()
+    sess = ModestSession(profile=diurnal_profile(n=10_000, seed=0),
+                         contention="approx")
+    res = sess.run(30.0)
+    wall = time.monotonic() - t0
+    assert res.rounds_completed >= 1, "no round completed at n=10k"
+    assert not sess.sim.exhausted
+    assert sess.sim.events_processed < EVENT_BUDGET_10K, (
+        f"event blow-up: {sess.sim.events_processed} events for 30 "
+        f"simulated seconds at n=10k")
+    assert wall < WALL_BUDGET_10K_S, (
+        f"wall-clock blow-up: {wall:.1f}s for 30 simulated seconds at "
+        f"n=10k (budget {WALL_BUDGET_10K_S}s)")
+    assert res.train_node_seconds > 0.0
+    assert res.usage["total_bytes"] > 0
