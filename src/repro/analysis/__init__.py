@@ -1,0 +1,20 @@
+"""Determinism & protocol-safety static analysis (docs/ANALYSIS.md).
+
+Two instruments guard the contracts every golden/conformance test rests
+on (tie-break pinning, RNG purity, the single fault-interception point):
+
+* :mod:`repro.analysis.lint` — AST rules DL001–DL005 with a
+  ``# noqa: DLxxx(reason)`` waiver grammar and per-path scoping from
+  ``pyproject.toml``. CLI: ``python -m repro.analysis src/``.
+* :mod:`repro.analysis.races` — a shadow-mode simulator instrument that
+  records per-handler write sets and flags equal-timestamp event pairs
+  whose outcome only *happens* to be deterministic.
+  CLI: ``python -m repro.analysis races``.
+"""
+
+from repro.analysis.lint import (Finding, format_findings, lint_paths,
+                                 lint_source)
+from repro.analysis.races import RaceDetector
+
+__all__ = ["Finding", "format_findings", "lint_paths", "lint_source",
+           "RaceDetector"]

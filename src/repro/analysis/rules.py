@@ -1,0 +1,128 @@
+"""Rule catalog: the determinism / protocol-safety contracts each DLxxx
+rule protects, as data.
+
+The linter (``repro.analysis.lint``) implements the detection logic; this
+module is the single place where a rule's identity — id, title, the repo
+contract it guards, and the default path scope it applies to — lives, so
+``docs/ANALYSIS.md``, the CLI ``--explain`` output and the per-path config
+all draw from one source.
+
+Path scopes are prefix matches against the repo-relative posix path of
+the linted file. ``paths`` = where the rule fires; ``exclude`` = carve-
+outs (e.g. the network fabric itself is exempt from the interception-
+bypass rule — it *is* the interception point). Both are overridable from
+``pyproject.toml`` ``[tool.repro-analysis]`` (see ``repro.analysis.config``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    contract: str                    # the repo invariant this rule protects
+    rationale: str                   # why violating it breaks the invariant
+    paths: Tuple[str, ...] = ("src/repro",)
+    exclude: Tuple[str, ...] = field(default_factory=tuple)
+
+
+RULES = {
+    "DL001": Rule(
+        id="DL001",
+        title="unseeded / module-global RNG in simulation-semantics code",
+        contract=(
+            "Every trajectory is a pure function of (seed, schedule): all "
+            "randomness is drawn from a session-owned "
+            "np.random.default_rng(seed) in simulator event order "
+            "(docs/FAULTS.md 'Seeded determinism')."
+        ),
+        rationale=(
+            "Module-level np.random.* / stdlib random.* draws consume the "
+            "process-global stream, whose state depends on import order "
+            "and whatever ran before the session — the same seed then "
+            "replays a different trajectory and the golden tests go flaky."
+        ),
+        paths=("src/repro",),
+    ),
+    "DL002": Rule(
+        id="DL002",
+        title="wall-clock read in simulation-semantics code",
+        contract=(
+            "Simulated time is Simulator.now, advanced only by the event "
+            "queue; nothing semantic may observe host wall-clock."
+        ),
+        rationale=(
+            "time.time()/datetime.now()/perf_counter() values differ per "
+            "run and per machine; any one of them feeding an event delay, "
+            "an RNG seed or a recorded metric makes trajectories "
+            "irreproducible. Timing *display* (benchmarks, progress "
+            "logging) is fine — allow-list the path or waive the line."
+        ),
+        paths=("src/repro",),
+        exclude=("src/repro/utils/logging.py", "benchmarks"),
+    ),
+    "DL003": Rule(
+        id="DL003",
+        title="order-sensitive iteration over an unordered collection",
+        contract=(
+            "Event tie-breaking is (time, seq) with seq = schedule-call "
+            "order (docs/SCALE.md); flow sets are insertion-ordered dicts "
+            "'so tie-breaking is deterministic by construction' (PR 3). "
+            "Anything feeding the event queue, an RNG draw, a digest or a "
+            "float accumulation must iterate in a deterministic order."
+        ),
+        rationale=(
+            "CPython set/frozenset iteration order over str keys depends "
+            "on PYTHONHASHSEED: a for-loop over a set that schedules "
+            "events or consumes RNG yields a different seq assignment / "
+            "stream position per process. Sorting by id() is the same "
+            "hazard (object addresses). Membership tests and order-"
+            "insensitive folds (any/all/min/max/sum/len) are fine; "
+            "sorted(s) is the canonical fix."
+        ),
+        paths=("src/repro",),
+    ),
+    "DL004": Rule(
+        id="DL004",
+        title="message delivery bypassing the fault-interception point",
+        contract=(
+            "Network.send is the single interception point: every WAN "
+            "message consults FaultInjector.transit (docs/FAULTS.md), so "
+            "a fault schedule sees ALL protocol traffic."
+        ),
+        rationale=(
+            "Calling node.receive(...) directly, or reaching into "
+            "Network._dispatch, delivers a message the fault fabric never "
+            "saw — a blind spot where Drop/Duplicate/Partition rules "
+            "silently do not apply and conformance schedules stop "
+            "covering the code path."
+        ),
+        paths=("src/repro/sim", "src/repro/core"),
+        exclude=("src/repro/sim/network.py",),
+    ),
+    "DL005": Rule(
+        id="DL005",
+        title="jax tracing hazard (tracer leak / jit-cache churn)",
+        contract=(
+            "Engine hot loops compile once and replay (docs/ENGINE.md): "
+            "traced functions are pure, and jit boundaries are built at "
+            "setup time, not per iteration."
+        ),
+        rationale=(
+            "Assigning to self.* inside a jit/vmap/pallas-traced function "
+            "leaks a tracer into long-lived state (escaped-tracer errors "
+            "or silently stale constants); constructing jax.jit/vmap/"
+            "pallas_call inside a loop body builds a fresh cache entry "
+            "per iteration, turning the hot path into a compile loop."
+        ),
+        paths=("src/repro/engine", "src/repro/kernels"),
+    ),
+}
+
+
+def rule(rule_id: str) -> Rule:
+    return RULES[rule_id]

@@ -505,5 +505,6 @@ class ModestNode:
         sends itself the initial model."""
         payload = (M.ModelPayload(params=init_params) if init_params is not None
                    else M.ModelPayload(nbytes=self.task.model_bytes()))
-        self.receive(M.TrainMsg(sender=self.node_id, round_k=round_k,
-                                model=payload, view=self.view()))
+        self.receive(M.TrainMsg(  # noqa: DL004(round-1 self-activation is loopback — never on the WAN, exempt from link faults by the fabric contract)
+            sender=self.node_id, round_k=round_k,
+            model=payload, view=self.view()))

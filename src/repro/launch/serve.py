@@ -81,20 +81,20 @@ def main():
         decode = server.jit_decode(
             jax.eval_shape(lambda: params), jax.eval_shape(lambda: cache))
 
-        t0 = time.time()
+        t0 = time.time()  # noqa: DL002(prefill/decode throughput timing display)
         logits, cache = prefill(params, batch, cache)
         logits = jax.block_until_ready(logits)
-        t_prefill = time.time() - t0
+        t_prefill = time.time() - t0  # noqa: DL002(prefill/decode throughput timing display)
 
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         generated = [tok]
-        t0 = time.time()
+        t0 = time.time()  # noqa: DL002(prefill/decode throughput timing display)
         for _ in range(args.new_tokens - 1):
             logits, cache = decode(params, tok, cache)
             tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
             generated.append(tok)
         jax.block_until_ready(tok)
-        t_decode = time.time() - t0
+        t_decode = time.time() - t0  # noqa: DL002(prefill/decode throughput timing display)
 
     toks = jnp.concatenate(generated, axis=1)
     tps = args.batch * (args.new_tokens - 1) / max(t_decode, 1e-9)

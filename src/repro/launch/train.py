@@ -154,12 +154,12 @@ def run_mesh(args) -> None:
             weights = (rng.random(P) >= args.failure_rate).astype(np.float32)
             if weights.sum() == 0:
                 weights[0] = 1.0
-            t0 = time.time()
+            t0 = time.time()  # noqa: DL002(per-round step timing display)
             state, metrics = step(state, batch, jnp.asarray(weights))
             loss = float(metrics["loss"])
             print(f"[train:mesh] round={r} sample={sample_ids[:4]}... "
                   f"active={int(weights.sum())}/{P} loss={loss:.4f} "
-                  f"({time.time() - t0:.2f}s)")
+                  f"({time.time() - t0:.2f}s)")  # noqa: DL002(per-round step timing display)
     print("[train:mesh] done")
 
 

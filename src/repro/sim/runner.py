@@ -75,13 +75,19 @@ def _profile_defaults(profile, n_nodes, task, extra_required=()):
 
 def _churn_setup(sim, profile, enabled: bool, ids, on_offline, on_online,
                  network=None):
-    """(driver, initially-offline ids); (None, empty set) when churn is off."""
+    """(driver, initially-offline ids); (None, ()) when churn is off.
+
+    The offline ids come back as a *list* in node-id order, never a set:
+    callers iterate it to flip status flags, and set iteration order over
+    str ids is PYTHONHASHSEED-dependent (the DL003 lint hazard) — today
+    those writes are commutative, but the iteration order must not be one
+    refactor away from leaking into event scheduling."""
     if profile is None or not enabled:
-        return None, set()
+        return None, []
     driver = AvailabilityDriver(sim, profile, ids,
                                 on_offline=on_offline, on_online=on_online,
                                 network=network)
-    return driver, set(driver.initially_offline())
+    return driver, driver.initially_offline()
 
 
 @dataclass
@@ -160,12 +166,19 @@ class ModestSession:
         self._latest_round_seen = 0
         self._eval_models: Dict[int, object] = {}
         self.profile = profile
+        # Uniform RNG threading (docs/ANALYSIS.md DL001): every stream the
+        # session consumes is derived from the session seed with a fixed
+        # offset, so (seed, schedule) -> trajectory stays a pure function.
         self._churn_rng = np.random.default_rng(seed + 5678)
+        self._join_rng = np.random.default_rng(seed + 9012)
 
         ids = [str(i) for i in range(n_nodes)]
-        offline_now = set()
+        # insertion-ordered (dict, not set): this collection is iterated
+        # below, and iteration order must be deterministic by construction
+        # (docs/ANALYSIS.md DL003), not by the accident of str hashing
+        offline_now: Dict[str, None] = {}
         if profile is not None and churn_from_profile:
-            offline_now = {nid for nid in ids
+            offline_now = {nid: None for nid in ids
                            if not profile.timeline(nid).is_online(0.0)}
         fixed_id = None
         if fixed_aggregator:
@@ -185,7 +198,7 @@ class ModestSession:
             self.sim, profile, churn_from_profile,
             [i for i in ids if i != fixed_id],
             self._trace_offline, self._trace_online, network=self.net)
-        offline_now.discard(fixed_id)
+        offline_now.pop(fixed_id, None)
         # One shared bootstrap view, adopted copy-on-write by every node:
         # a single immutable base layer (repro.sim.soa.population_view)
         # under per-node deltas, so construction is O(n) and a node's
@@ -321,8 +334,12 @@ class ModestSession:
                 if self.data else None,
                 train_speed=0.05, on_aggregate=self._on_aggregate,
                 engine=self.engine)
-            # A joiner knows only its bootstrap peers (Alg. 2 Require).
-            peers = list(np.random.default_rng(len(node_id)).choice(
+            # A joiner knows only its bootstrap peers (Alg. 2 Require),
+            # drawn from the session-owned join stream — not an ad-hoc
+            # default_rng(len(node_id)), which tied the draw to the id's
+            # *length* instead of the session seed and made two different
+            # joiners with same-length names pick identical peers.
+            peers = list(self._join_rng.choice(
                 [n for n in self.nodes], size=min(self.mcfg.sample_size,
                                                   len(self.nodes)),
                 replace=False))
