@@ -17,14 +17,24 @@ its pre-engine baseline on the paper CNN:
   paper's CIFAR-shape operating point and at a dispatch-bound small
   shape.
 
+A fourth claim rides along since the sharded engine (docs/SHARDING.md):
+the per-shard fused aggregate→quantize path produces **bit-identical**
+int8 codes on 1 device and on an 8-way forced host-platform mesh — the
+``sharded`` rows carry a codes checksum from each device count so the
+artifact records the equivalence, not just the timing.
+
 ``--quick`` runs the CI-sized subset and still emits the full JSON.
 """
 
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
+import os
 import platform
+import subprocess
+import sys
 import time
 
 import jax
@@ -152,6 +162,74 @@ def bench_cohort(S: int, reps: int, *, image=(32, 32, 3), samples=40,
     }
 
 
+def _sharded_row(reps: int) -> dict:
+    """One sharded-aggregation row at the *current* device count.
+
+    Runs in the ``--_sharded-worker`` subprocess: the parent sets
+    ``xla_force_host_platform_device_count`` in the env before this
+    interpreter imports jax (the count is locked at first init).
+    """
+    from repro.kernels.fused import shard_align
+    from repro.launch.mesh import make_engine_mesh
+
+    task = cnn_task()
+    spec = task.flat_spec
+    params = task.init_params(0)
+    fms = [FlatModel.pack(jax.tree.map(lambda l: l + i * 0.01, params), spec)
+           for i in range(5)]
+    w = [1.0] * 5
+    mesh = make_engine_mesh()
+    shardings = spec.sharding(mesh) if mesh is not None else None
+    shards = shardings.n_shards if shardings is not None else 1
+    local_n = shard_align(spec.n, shards) // shards if shards > 1 else spec.n
+
+    ms_one = _time(lambda: aggregate_flatmodel(
+        fms, w, spec=spec, shardings=shardings).buffer, reps)
+    _, codes, _ = aggregate_flatmodel(fms, w, spec=spec, quantize=True,
+                                      shardings=shardings)
+    ms_q = _time(lambda: aggregate_flatmodel(
+        fms, w, spec=spec, quantize=True, shardings=shardings)[1], reps)
+    return {
+        "model": "paper-cnn", "P": 5, "devices": jax.device_count(),
+        "model_shards": shards,
+        "padded_n": shard_align(spec.n, shards) if shards > 1 else spec.n,
+        "local_tile": tile_for(local_n, 5),
+        "onepass_ms": round(ms_one, 2),
+        "fused_agg_quant_ms": round(ms_q, 2),
+        "codes_sha256": hashlib.sha256(
+            np.asarray(codes).tobytes()).hexdigest()[:16],
+    }
+
+
+def bench_sharded(reps: int) -> list[dict]:
+    """1-vs-8-device sharded aggregation rows (docs/SHARDING.md).
+
+    jax locks the device count at first init, so each row runs in its own
+    subprocess whose env forces the host-platform device count before the
+    interpreter imports jax. On this CPU container the 8 forced devices
+    share one threadpool, so the rows validate the sharded path's
+    *bit-identity* (matching ``codes_sha256``), not a speedup — the
+    per-shard VMEM tiles pay off on real multi-chip meshes.
+    """
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rows = []
+    for n_dev in (1, 8):
+        env = dict(os.environ)
+        flags = [f for f in env.get("XLA_FLAGS", "").split()
+                 if "xla_force_host_platform_device_count" not in f]
+        env["XLA_FLAGS"] = " ".join(
+            flags + [f"--xla_force_host_platform_device_count={n_dev}"])
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(root, "src")] +
+            ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_kernels",
+             "--_sharded-worker", "--reps", str(reps)],
+            capture_output=True, text=True, env=env, cwd=root, check=True)
+        rows.append(json.loads(out.stdout.strip().splitlines()[-1]))
+    return rows
+
+
 def run(quick: bool = True):
     reps = 5 if quick else 9
     agg_rows = [bench_aggregation(5, reps)]
@@ -166,6 +244,7 @@ def run(quick: bool = True):
         bench_cohort(5, reps + 4, image=(8, 8, 3), samples=64, batch_size=4,
                      epochs=3, label="8x8-dispatch-bound"),
     ]
+    sharded_rows = bench_sharded(reps)
     artifact = {
         "meta": {
             "quick": quick,
@@ -178,11 +257,14 @@ def run(quick: bool = True):
         },
         "aggregate": agg_rows,
         "cohort": cohort_rows,
+        "sharded": sharded_rows,
         "headline": {
             "onepass_vs_per_leaf": agg_rows[0]["speedup_onepass"],
             "fused_agg_quant": agg_rows[0]["speedup_fused_quant"],
             "vmapped_cohort_s5": max(r["speedup_vmapped"]
                                      for r in cohort_rows),
+            "sharded_codes_identical": len(
+                {r["codes_sha256"] for r in sharded_rows}) == 1,
         },
     }
     with open(out_path("BENCH_kernels.json"), "w") as fh:
@@ -193,6 +275,7 @@ def run(quick: bool = True):
           for r in agg_rows], "kernels.csv")
     emit([{k: v for k, v in r.items() if not isinstance(v, list)}
           for r in cohort_rows], "kernels_cohort.csv")
+    emit(sharded_rows, "kernels_sharded.csv")
     return rows
 
 
@@ -200,5 +283,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized subset (same JSON artifact)")
+    ap.add_argument("--_sharded-worker", action="store_true",
+                    help=argparse.SUPPRESS)   # bench_sharded subprocess
+    ap.add_argument("--reps", type=int, default=5, help=argparse.SUPPRESS)
     args = ap.parse_args()
-    run(quick=args.quick)
+    if getattr(args, "_sharded_worker"):
+        print(json.dumps(_sharded_row(args.reps)))
+    else:
+        run(quick=args.quick)

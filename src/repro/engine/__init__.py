@@ -19,6 +19,7 @@ See ``docs/ENGINE.md`` for layout, semantics, and when to fall back to
 
 from repro.engine.cohort import (  # noqa: F401
     BatchedEngine,
+    MeshEngine,
     SequentialEngine,
     make_engine,
 )

@@ -320,7 +320,8 @@ class BatchedEngine:
             for t, (x, y, m) in enumerate(batches):
                 xs[t, s], ys[t, s], ms[t, s], act[t, s] = x, y, m, True
 
-        buf = jnp.stack([as_buffer(j.params, self.spec) for j in jobs])
+        buf = self._place(jnp.stack([as_buffer(j.params, self.spec)
+                                     for j in jobs]))
         state = self._opt.init(buf)
         # Form selection (both are the same step math): small per-step
         # volume → one fused scan dispatch for the whole cohort round;
@@ -339,6 +340,11 @@ class BatchedEngine:
             self._done[j.key] = (FlatModel(buf[s], self._out_spec(j.params)),
                                  j.params, j.confirmed, j.hp)
 
+    def _place(self, buf):
+        """Device-placement hook for the stacked ``(S, N)`` cohort buffer;
+        the MeshEngine overrides this to shard N over its mesh."""
+        return buf
+
     def _out_spec(self, params):
         """Results must come back in the *submitted* params' dtypes (e.g. a
         bf16-cast model trained through the fp32 engine stays bf16)."""
@@ -355,6 +361,40 @@ class BatchedEngine:
             self._alt_specs[dts] = alt
         return alt
 
+class MeshEngine(BatchedEngine):
+    """BatchedEngine whose flat hot-path buffers are sharded over a
+    device mesh (ROADMAP item 2, docs/SHARDING.md).
+
+    The ``(S, N)``/``(P, N)`` buffers shard the parameter axis N over the
+    mesh's ``model`` axis (:meth:`FlatSpec.sharding`); the jitted cohort
+    step and the flat optimizer run on donated sharded buffers, and
+    aggregation takes the per-shard one-pass path. Event semantics are
+    untouched — same simulated rounds, durations, and byte accounting as
+    ``batched``; only where the arithmetic runs changes. Results are
+    fp32-tolerance equal to the single-device engine, and the fused
+    aggregate→quantize int8 codes are bit-identical.
+    """
+
+    name = "sharded"
+
+    def __init__(self, task, mesh):
+        super().__init__(task)
+        self.mesh = mesh
+        self.shardings = task.flat_spec.sharding(mesh)
+        # re-resolve the cohort ops against the sharded layout (the
+        # superclass grabbed the single-device set; both are cached on
+        # the task, so neither is retraced across sessions)
+        self._opt, self._step, self._scan = _cohort_ops(
+            task, shardings=self.shardings)
+
+    def _place(self, buf):
+        return jax.device_put(buf, self.shardings.stack)
+
+    def aggregate(self, models, weights=None):
+        return self.task.aggregate(models, weights,
+                                   shardings=self.shardings)
+
+
 # Per-step element-count threshold below which the whole cohort round is
 # one fused scan dispatch instead of one dispatch per batch index.
 _SCAN_VOLUME = 65536
@@ -362,9 +402,9 @@ _SCAN_VOLUME = 65536
 _MAX_VMAP_WIDTH = 16 if jax.default_backend() == "tpu" else 3
 
 
-def _cohort_ops(task):
+def _cohort_ops(task, shardings=None):
     """(flat optimizer, per-batch step jit, whole-round scan jit) for
-    ``task``, cached on it.
+    ``task``, cached on it (one entry per flat-buffer sharding).
 
     The vmapped step collapses S·B per-node dispatches to B (or to 1 in
     scan form), with the ``(S, N)`` params and optimizer-state buffers as
@@ -373,29 +413,48 @@ def _cohort_ops(task):
     through trailing slots untouched — under the current same-step-count
     grouping in ``_flush`` the mask is always all-True, but the gating
     keeps any padded grouping policy exact.
+
+    With ``shardings`` (a :class:`repro.sharding.FlatShardings`) the
+    per-row gradients are computed on *replicated* leaves (the model
+    math needs whole tensors; letting GSPMD repartition it would change
+    fp reduction order and break the engine-equivalence contract), while
+    the optimizer state, its update, and the parameter write stay
+    sharded over the model axis — all elementwise over N, so sharding
+    them cannot change any value. Net effect: results are bit-equal to
+    the batched engine, and the N-proportional optimizer buffers (the
+    memory that scales with model size) live sharded and donated.
     """
-    cached = getattr(task, "_cohort_ops_cache", None)
-    if cached is not None:
-        return cached
+    cache = getattr(task, "_cohort_ops_cache", None)
+    if cache is None:
+        cache = task._cohort_ops_cache = {}
+    if shardings in cache:
+        return cache[shardings]
     spec = task.flat_spec
     loss = masked_loss_for(task)
     opt = build_flat(task.tcfg)
     to_batch = task._to_batch
     opt_update = opt.update
+    if shardings is None:
+        pin = rep = lambda b: b                       # noqa: E731
+    else:
+        pin = lambda b: jax.lax.with_sharding_constraint(   # noqa: E731
+            b, shardings.stack)
+        rep = lambda b: jax.lax.with_sharding_constraint(   # noqa: E731
+            b, shardings.replicated)
 
     def step(buf, state, xb, yb, mb, active):
-        ptree = spec.unpack_stacked(buf)
+        ptree = spec.unpack_stacked(rep(buf))
 
         def grad_one(p, x, y, m):
             return jax.grad(loss)(p, to_batch(x, y, m))
 
         gtree = jax.vmap(grad_one)(ptree, xb, yb, mb)
-        g = spec.pack_stacked(gtree)
+        g = rep(spec.pack_stacked(gtree))
         upd, nstate = opt_update(g, state, buf)
         keep = active[:, None]
-        nbuf = jnp.where(keep, buf + upd, buf)
-        nstate = {k: jnp.where(keep if v.ndim == 2 else active,
-                               v, state[k])
+        nbuf = pin(jnp.where(keep, buf + upd, buf))
+        nstate = {k: (pin(jnp.where(keep, v, state[k])) if v.ndim == 2
+                      else jnp.where(active, v, state[k]))
                   for k, v in nstate.items()}
         return nbuf, nstate
 
@@ -410,21 +469,31 @@ def _cohort_ops(task):
     # donated-but-unreturned state would just warn)
     ops = (opt, jax.jit(step, donate_argnums=(0, 1)),
            jax.jit(train_scan, donate_argnums=(0,)))
-    task._cohort_ops_cache = ops
+    cache[shardings] = ops
     return ops
 
 
 def make_engine(kind: Optional[str], task):
-    """``kind``: "batched" | "sequential" | None (auto).
+    """``kind``: "batched" | "sharded" | "sequential" | None (auto).
 
     Auto picks batched for tasks that expose the flat/cohort surface
     (:class:`~repro.models.tasks.JaxTask`) and sequential otherwise
     (e.g. :class:`~repro.core.tasks.AbstractTask` byte-only runs, where
-    there is nothing to compute).
+    there is nothing to compute). "sharded" runs the batched engine with
+    its flat buffers sharded over the local device mesh; on a single
+    device it falls back to "batched" (sharding would be a no-op).
     """
     if kind is None:
         kind = "batched" if getattr(task, "supports_cohort", False) \
             else "sequential"
+    if kind == "sharded":
+        if not getattr(task, "supports_cohort", False):
+            return SequentialEngine(task)
+        from repro.launch.mesh import make_engine_mesh
+        mesh = make_engine_mesh()
+        if mesh is None:
+            return BatchedEngine(task)
+        return MeshEngine(task, mesh)
     if kind == "batched":
         if not getattr(task, "supports_cohort", False):
             return SequentialEngine(task)
@@ -432,8 +501,8 @@ def make_engine(kind: Optional[str], task):
     if kind == "sequential":
         return SequentialEngine(task)
     raise ValueError(f"unknown engine {kind!r} "
-                     "(expected 'batched' or 'sequential')")
+                     "(expected 'batched', 'sharded' or 'sequential')")
 
 
-__all__ = ["BatchedEngine", "SequentialEngine", "make_engine",
+__all__ = ["BatchedEngine", "MeshEngine", "SequentialEngine", "make_engine",
            "FlatModel", "as_tree"]

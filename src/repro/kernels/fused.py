@@ -42,10 +42,27 @@ _VMEM_BUDGET = 6 * 1024 * 1024   # bytes for the (P, TILE) block, double-buffere
 
 
 def tile_for(n: int, p: int) -> int:
-    """Largest SUBTILE multiple ≤ VMEM budget for P fp32 replicas ≥ n/tiles."""
-    max_tile = max(SUBTILE, (_VMEM_BUDGET // (4 * max(p, 1))) // SUBTILE * SUBTILE)
+    """Largest SUBTILE multiple whose (P, tile) fp32 block fits the VMEM
+    budget *double-buffered* (2 blocks in flight while the grid pipelines),
+    floored at one SUBTILE so tiny budgets still quantize correctly. The
+    floor can exceed the budget for extreme P — the budget is a pipelining
+    target, not a hard ceiling."""
+    per_lane = 2 * 4 * max(p, 1)      # double-buffered fp32, P replica rows
+    max_tile = max(SUBTILE, (_VMEM_BUDGET // per_lane) // SUBTILE * SUBTILE)
     need = -(-n // SUBTILE) * SUBTILE            # n rounded up to SUBTILE
     return min(need, max_tile)
+
+
+def shard_align(n: int, shards: int) -> int:
+    """Padded total length so each of ``shards`` equal contiguous
+    model-axis shards is a SUBTILE multiple.
+
+    Padding only at the global tail would misalign per-shard subtile
+    boundaries; aligning every shard keeps the global SUBTILE grid
+    identical to the single-device layout, so per-SUBTILE quantization
+    scales — and therefore int8 codes — stay bit-identical."""
+    per = -(-n // (shards * SUBTILE)) * SUBTILE
+    return shards * per
 
 
 def _agg_kernel(w_ref, x_ref, m_ref, o_ref):
@@ -156,4 +173,89 @@ def aggregate_quantize_flat(x, w, int_mask=None, *, interpret: bool = False):
     tile = tile_for(N, P)
     xp, mp, n = _pad_flat(x, jnp.asarray(int_mask, jnp.float32), tile)
     mean, q, s = _onepass_quant_tiles(xp, w, mp, tile=tile, interpret=interpret)
+    return mean[:n], q[:n], s[: -(-n // SUBTILE)]
+
+
+# ---------------------------------------------------------------------------
+# Sharded variants: the same one-pass aggregation per model-axis shard
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_onepass(mesh, model_axis: str, quantize: bool, use_kernel: bool,
+                     interpret: bool):
+    """jit(shard_map) running the one-pass aggregation per model-axis shard.
+
+    Inputs arrive padded to ``shard_align`` lengths, so every local block
+    is a SUBTILE multiple and the kernel path recomputes its VMEM tile
+    *per local shard* (``tile_for(local_n, P)``). ``check_rep=False``
+    because ``pallas_call`` has no replication rule under shard_map.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def local(x, w, m):
+        if use_kernel:
+            if quantize:
+                return aggregate_quantize_flat(x, w, m, interpret=interpret)
+            return (aggregate_flat_onepass(x, w, m, interpret=interpret),)
+        # jnp local block: the exact contraction of ops._jnp_onepass —
+        # elementwise over N, so sharding N cannot change any value.
+        total = jnp.sum(w)
+        mean = jnp.tensordot(w, x, axes=(0, 0)) / total
+        mean = jnp.where(m > 0, jnp.round(mean), mean)
+        if not quantize:
+            return (mean,)
+        t = mean.reshape(-1, SUBTILE)          # local n is SUBTILE-aligned
+        scale = jnp.maximum(jnp.max(jnp.abs(t), axis=1), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(t / scale[:, None]), -127, 127)
+        return mean, q.reshape(-1).astype(jnp.int8), scale
+
+    M = model_axis
+    f = shard_map(local, mesh=mesh,
+                  in_specs=(P(None, M), P(None), P(M)),
+                  out_specs=tuple([P(M)] * (3 if quantize else 1)),
+                  check_rep=False)
+    return jax.jit(f)
+
+
+def _pad_sharded(x, int_mask, mesh, model_axis):
+    P, N = x.shape
+    if int_mask is None:
+        int_mask = jnp.zeros((N,), jnp.float32)
+    int_mask = jnp.asarray(int_mask, jnp.float32)
+    pad = shard_align(N, mesh.shape[model_axis]) - N
+    if pad:
+        x = jnp.pad(x, [(0, 0), (0, pad)])
+        int_mask = jnp.pad(int_mask, (0, pad))
+    return x, int_mask, N
+
+
+def aggregate_flat_onepass_sharded(x, w, int_mask=None, *, mesh,
+                                   model_axis: str = "model",
+                                   use_kernel: bool = True,
+                                   interpret: bool = False):
+    """Sharded :func:`aggregate_flat_onepass`: mean ``(N,)`` sharded over
+    ``model_axis``. Bit-identical to the single-device path (the weighted
+    mean is elementwise over N)."""
+    xp, mp, n = _pad_sharded(x, int_mask, mesh, model_axis)
+    (mean,) = _sharded_onepass(mesh, model_axis, False, use_kernel,
+                               interpret)(xp, w, mp)
+    return mean[:n]
+
+
+def aggregate_quantize_flat_sharded(x, w, int_mask=None, *, mesh,
+                                    model_axis: str = "model",
+                                    use_kernel: bool = True,
+                                    interpret: bool = False):
+    """Sharded fused aggregate→quantize.
+
+    Per-shard lengths are SUBTILE-aligned (:func:`shard_align`), so the
+    global subtile grid — and with it codes and scales — is bit-identical
+    to :func:`aggregate_quantize_flat` on one device; trailing pad
+    subtiles are sliced off before returning.
+    """
+    xp, mp, n = _pad_sharded(x, int_mask, mesh, model_axis)
+    mean, q, s = _sharded_onepass(mesh, model_axis, True, use_kernel,
+                                  interpret)(xp, w, mp)
     return mean[:n], q[:n], s[: -(-n // SUBTILE)]

@@ -15,7 +15,9 @@ import numpy as np
 from repro.engine.flat import FlatModel, FlatSpec, as_buffer
 from repro.kernels.aggregate import TILE, aggregate_tiles
 from repro.kernels.fused import (SUBTILE, aggregate_flat_onepass,
-                                 aggregate_quantize_flat)
+                                 aggregate_flat_onepass_sharded,
+                                 aggregate_quantize_flat,
+                                 aggregate_quantize_flat_sharded)
 from repro.kernels.quantize import dequantize_tiles, quantize_tiles
 from repro.utils.pytree import check_aggregation_weights as _check_weights
 
@@ -111,7 +113,7 @@ def _jnp_onepass_quant(spec_n: int, has_int: bool):
 
 
 def aggregate_flatmodel(models, weights=None, *, spec=None, quantize=False,
-                        interpret=None, use_kernel=None):
+                        interpret=None, use_kernel=None, shardings=None):
     """Whole-model one-pass aggregation over FlatModels (or pytrees).
 
     ``models``: list of :class:`~repro.engine.flat.FlatModel` and/or
@@ -124,6 +126,12 @@ def aggregate_flatmodel(models, weights=None, *, spec=None, quantize=False,
     contraction (False). Default: Pallas on TPU, jnp elsewhere — on CPU
     the interpret-mode kernel exists for validation, not speed. Both paths
     are a single fused pass over the ``(P, N)`` stack either way.
+
+    ``shardings``: a :class:`repro.sharding.FlatShardings` (from
+    ``spec.sharding(mesh)``) shards the parameter axis over the mesh's
+    ``model`` axis and aggregates per shard; the result mean and int8
+    codes are bit-identical to the single-device path (docs/SHARDING.md).
+    Ignored on a 1-shard mesh.
     """
     if weights is None:
         weights = [1.0] * len(models)
@@ -138,6 +146,20 @@ def aggregate_flatmodel(models, weights=None, *, spec=None, quantize=False,
         use_kernel = jax.default_backend() == "tpu"
     interpret = _default_interpret() if interpret is None else interpret
     int_mask = jnp.asarray(spec.int_mask) if spec.has_int else None
+    if shardings is not None and shardings.n_shards > 1:
+        mask = (int_mask.astype(jnp.float32) if int_mask is not None
+                else None)
+        if quantize:
+            mean, codes, scales = aggregate_quantize_flat_sharded(
+                x, w, mask, mesh=shardings.mesh,
+                model_axis=shardings.model_axis,
+                use_kernel=use_kernel, interpret=interpret)
+            return FlatModel(mean, spec), codes, scales
+        mean = aggregate_flat_onepass_sharded(
+            x, w, mask, mesh=shardings.mesh,
+            model_axis=shardings.model_axis,
+            use_kernel=use_kernel, interpret=interpret)
+        return FlatModel(mean, spec)
     if quantize:
         if use_kernel:
             mask = (int_mask.astype(jnp.float32) if int_mask is not None

@@ -30,4 +30,22 @@ def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
 
 
 def make_mesh_from_config(mesh_cfg: MeshConfig):
-    return jax.make_mesh(mesh_cfg.shape, mesh_cfg.axes)
+    # via the compat shim, NOT jax.make_mesh directly: jax 0.4.x (this
+    # container) has no jax.make_mesh, and the shim also picks Auto axis
+    # types where supported.
+    return make_mesh(mesh_cfg.shape, mesh_cfg.axes)
+
+
+def make_engine_mesh():
+    """``("data", "model")`` mesh over the local devices for the sharded
+    FlatModel engine (``engine="sharded"``, docs/SHARDING.md).
+
+    All devices go to the ``model`` axis — the engine shards the flat
+    parameter axis N and replicates cohort rows. Returns None on a single
+    device (sharding would be a no-op; ``make_engine`` falls back to the
+    batched engine).
+    """
+    n = jax.device_count()
+    if n < 2:
+        return None
+    return make_mesh((1, n), ("data", "model"))

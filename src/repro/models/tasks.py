@@ -163,13 +163,16 @@ class JaxTask(LearningTask):
         return [{k: v / n for k, v in a.items()} for a in aggs]
 
     def aggregate(self, models: Sequence,
-                  weights: Optional[Sequence[float]] = None):
+                  weights: Optional[Sequence[float]] = None, *,
+                  shardings=None):
         """AVG(Θ) via the whole-model one-pass path; returns a FlatModel
         (unflattened lazily at task boundaries). Inputs may be FlatModels
-        or pytrees (mixed is fine)."""
+        or pytrees (mixed is fine). ``shardings`` (a
+        :class:`repro.sharding.FlatShardings`) runs the contraction per
+        model-axis shard — the MeshEngine passes its mesh layout here."""
         from repro.kernels.ops import aggregate_flatmodel
         return aggregate_flatmodel(list(models), weights,
-                                   spec=self.flat_spec)
+                                   spec=self.flat_spec, shardings=shardings)
 
     def aggregate_sequential(self, models: Sequence,
                              weights: Optional[Sequence[float]] = None):

@@ -16,14 +16,62 @@ not (one model, maximally sharded).
 from __future__ import annotations
 
 import re
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.config import MeshConfig, ModelConfig, ShapeConfig
+
+
+# ---------------------------------------------------------------------------
+# FlatModel engine shardings (docs/SHARDING.md)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FlatShardings:
+    """NamedShardings for the FlatModel engine's flat layouts on a mesh.
+
+    The parameter axis N is sharded over ``model_axis``; the leading
+    stack axes (S cohort rows, P population replicas) are replicated by
+    default or mapped to ``data`` when ``flat_shardings`` is told to.
+    Hashable (frozen + hashable fields) so jit/shard_map caches can key
+    off it.
+    """
+
+    mesh: jax.sharding.Mesh
+    vec: NamedSharding          # (N,)  — one flat model
+    stack: NamedSharding        # (S, N) — cohort rows × params
+    pop: NamedSharding          # (P, N) — population replicas × params
+    replicated: NamedSharding   # weights (P,), (S,) state rows, scalars
+    model_axis: str = "model"
+
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+
+def flat_shardings(mesh, *, model_axis: str = "model",
+                   row_axis: Optional[str] = None) -> FlatShardings:
+    """Build :class:`FlatShardings` for ``mesh``.
+
+    ``row_axis`` optionally maps the leading S/P axis to a mesh axis
+    (e.g. ``"data"``); the default replicates rows so every device holds
+    its N-shard of every cohort member — the layout the one-pass
+    aggregation contraction wants.
+    """
+    ns = lambda *spec: NamedSharding(mesh, P(*spec))  # noqa: E731
+    return FlatShardings(mesh=mesh,
+                         vec=ns(model_axis),
+                         stack=ns(row_axis, model_axis),
+                         pop=ns(row_axis, model_axis),
+                         replicated=ns(),
+                         model_axis=model_axis)
 
 
 class ShardingPolicy:
@@ -67,6 +115,21 @@ class ShardingPolicy:
         tensor/expert-parallel axis.
         """
         F, M = self.fsdp_axis, "model"
+        if self.cfg.replicate_attention:
+            # §Perf lever (MoE archs): replicate ALL attention params —
+            # self- and cross-attention, wq/wk/wv *and* wo — so attention
+            # TP all-reduces vanish entirely. One explicit rule, not
+            # rule-order shadowing: previously wo/xattn kept their TP
+            # rules below and stayed unsharded only because the replicate
+            # rule happened to match first.
+            attn = [(r"attn/w[qkvo]$", None)]      # re.search: xattn too
+        else:
+            attn = [
+                (r"attn/w[qkv]$", (F, M)),
+                (r"attn/wo$", (M, F)),
+                (r"xattn/w[qkv]$", (F, M)),
+                (r"xattn/wo$", (M, F)),
+            ]
         return [
             # embeddings / heads
             (r"embed$", (M, F)),
@@ -78,13 +141,9 @@ class ShardingPolicy:
             (r"moe/dense/w[gu]$", (F, M)),
             (r"moe/dense/wd$", (M, F)),
             (r"moe/w[gud]$", (M, F, None)),
-            # attention (MoE §Perf lever: replicate instead of TP — the
-            # experts dominate params; attention TP all-reduces vanish)
-            (r"attn/w[qkvo]$", None) if self.cfg.replicate_attention else
-            (r"attn/w[qkv]$", (F, M)),
-            (r"attn/wo$", (M, F)),
-            (r"xattn/w[qkv]$", (F, M)),
-            (r"xattn/wo$", (M, F)),
+            # attention (rules built above: TP by default, fully
+            # replicated under cfg.replicate_attention)
+            *attn,
             # dense MLPs (swiglu / gelu): first matmuls shard d_ff
             (r"mlp/w[gui]$", (F, M)),
             (r"mlp/w[do]$", (M, F)),

@@ -127,10 +127,12 @@ class ModestSession:
 
     ``engine`` selects the compute path: ``"batched"`` (one vmapped
     flat-model batch per sampled cohort — default for tasks that support
-    it, i.e. :class:`~repro.models.tasks.JaxTask`), ``"sequential"``
-    (per-node reference path), or None for auto. Event semantics are
-    identical either way — per-node train durations still come from the
-    cost model; only wall-clock changes (docs/ENGINE.md).
+    it, i.e. :class:`~repro.models.tasks.JaxTask`), ``"sharded"`` (the
+    batched engine with flat buffers sharded over the local device mesh;
+    falls back to batched on one device — docs/SHARDING.md),
+    ``"sequential"`` (per-node reference path), or None for auto. Event
+    semantics are identical either way — per-node train durations still
+    come from the cost model; only wall-clock changes (docs/ENGINE.md).
     """
 
     def __init__(self, *, n_nodes: Optional[int] = None,

@@ -1,0 +1,92 @@
+"""Subprocess worker for the sharded-engine differential tests.
+
+jax locks the device count at first init, so the 8-device half of the
+single-vs-sharded differential must run in its own process with
+``xla_force_host_platform_device_count`` set before any jax import —
+this script does that itself (argv: ``engine n_devices out_prefix``).
+
+:func:`fingerprint` runs the paper-CNN ModestSession (trajectory + final
+aggregated buffer) plus a deterministic fused aggregate→quantize call;
+``main`` writes ``<out_prefix>.json`` / ``<out_prefix>.npz`` for the
+parent (tests/test_sharded.py) to compare against its own run. The
+parent also imports and calls :func:`fingerprint` directly for its
+local half — both halves are literally the same code.
+"""
+
+import json
+import os
+import sys
+
+
+def fingerprint(engine: str, duration: float = 30.0):
+    """Run the differential workload; returns (trajectory dict, arrays).
+
+    ``duration`` is bounded: event trajectories are engine-independent at
+    any horizon, but fp reduction order differs between device *counts*
+    (the forced host platform splits the CPU threadpool), so training
+    numerics drift chaotically with round count — the cross-process
+    differential compares a short run within fp32-amplification
+    tolerance, while same-device-set comparisons are bit-exact at any
+    length (tests/test_sharded.py).
+
+    Imports live inside so ``main`` can set XLA_FLAGS first.
+    """
+    import jax
+    import numpy as np
+
+    from repro.config import ModestConfig, TrainConfig
+    from repro.data import make_classification_task
+    from repro.kernels.ops import aggregate_flatmodel
+    from repro.models.tasks import cnn_task
+    from repro.sim.runner import ModestSession
+
+    data = make_classification_task(8, seed=0)
+    task = cnn_task()
+    mcfg = ModestConfig(n_nodes=8, sample_size=3, n_aggregators=1)
+    session = ModestSession(n_nodes=8, mcfg=mcfg,
+                            tcfg=TrainConfig(batch_size=10, seed=0),
+                            task=task, data=data, seed=0,
+                            eval_every_rounds=5, engine=engine)
+    result = session.run(duration)
+    last = max(session._eval_models)
+    final = np.asarray(session._eval_models[last].buffer)
+
+    # deterministic fused aggregate→quantize (sharded iff the engine is)
+    spec = task.flat_spec
+    rng = np.random.default_rng(0)
+    models = [spec.unpack(np.asarray(rng.standard_normal(spec.n),
+                                     np.float32)) for _ in range(5)]
+    weights = list(rng.random(5) + 0.1)
+    shardings = getattr(session.engine, "shardings", None)
+    mean, codes, scales = aggregate_flatmodel(
+        models, weights, spec=spec, quantize=True, shardings=shardings)
+
+    traj = {"engine": type(session.engine).__name__,
+            "devices": jax.device_count(),
+            "rounds": result.rounds_completed,
+            "total_bytes": result.usage["total_bytes"],
+            "history": result.history}
+    arrays = {"final": final, "agg_mean": np.asarray(mean.buffer),
+              "agg_codes": np.asarray(codes),
+              "agg_scales": np.asarray(scales)}
+    return traj, arrays
+
+
+def main() -> None:
+    engine, n_devices, out_prefix = sys.argv[1], int(sys.argv[2]), sys.argv[3]
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if "xla_force_host_platform_device_count" not in f]
+    flags.append(f"--xla_force_host_platform_device_count={n_devices}")
+    os.environ["XLA_FLAGS"] = " ".join(flags)
+
+    import numpy as np
+
+    traj, arrays = fingerprint(engine)
+    assert traj["devices"] == n_devices
+    with open(out_prefix + ".json", "w") as f:
+        json.dump(traj, f)
+    np.savez(out_prefix + ".npz", **arrays)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,10 @@
 """Sharding policy invariants for every (arch × mesh): all emitted specs
 divide their dims (the dry-run proves lowering; this is the fast guard)."""
 
+import functools
+
 import jax
+import numpy as np
 import pytest
 
 from repro import configs
@@ -64,3 +67,99 @@ def test_odd_vocab_replicated_not_failed(arch):
                                               jnp.bfloat16)}
     spec = policy.param_spec(template, with_participants=False)["embed"]
     assert tuple(spec)[0] is None
+
+
+# ---------------------------------------------------------------------------
+# property layer: param_spec / _fix_divisibility over the full config zoo
+# (all repro.configs entries × participant granularities × mesh forms)
+# ---------------------------------------------------------------------------
+
+GRANULARITIES = ["pod", "chip", "data_rank"]
+ODD_VOCABS = {51866, 32001}           # whisper / hymba — must replicate
+
+
+@functools.lru_cache(maxsize=None)
+def _abstract_tree(arch):
+    """Full-size abstract param tree (eval_shape only — no arrays)."""
+    from repro.models import build
+    cfg = configs.get_config(arch)
+    return jax.eval_shape(build(cfg).init, jax.random.key(0))
+
+
+def _spec_atoms(spec):
+    """Flatten a PartitionSpec's entries to mesh-axis atoms."""
+    atoms = []
+    for e in tuple(spec):
+        if e is None:
+            continue
+        atoms.extend(e if isinstance(e, tuple) else [e])
+    return atoms
+
+
+@pytest.mark.parametrize("gran", GRANULARITIES)
+@pytest.mark.parametrize("multi_pod", [False, True])
+@pytest.mark.parametrize("arch", sorted(configs.ARCHS))
+def test_param_spec_properties(arch, multi_pod, gran):
+    """For every (arch × granularity × mesh): spec rank == leaf rank, no
+    mesh axis used twice in one spec, every assignment divides its dim,
+    and odd vocab dims fall back to replication instead of failing to
+    lower. Exercised on both the serve-path tree and the train-path tree
+    (leading participant axis)."""
+    cfg = configs.get_config(arch).with_(participant_granularity=gran)
+    mcfg = MeshConfig(multi_pod=multi_pod)
+    policy = ShardingPolicy(cfg, mcfg)
+    tree = _abstract_tree(arch)
+    Pn = policy.n_participants
+
+    for with_p, template in [
+        (False, tree),
+        (True, jax.tree.map(
+            lambda leaf: jax.ShapeDtypeStruct((Pn,) + tuple(leaf.shape),
+                                              leaf.dtype), tree)),
+    ]:
+        specs = policy.param_spec(template, with_participants=with_p)
+        flat_l = jax.tree_util.tree_leaves(template)
+        flat_s = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(
+                x, jax.sharding.PartitionSpec))
+        assert len(flat_l) == len(flat_s)
+        for leaf, spec in zip(flat_l, flat_s):
+            entries = tuple(spec)
+            # rank match: one spec entry per array dim
+            assert len(entries) == len(leaf.shape), (arch, leaf.shape, spec)
+            # no axis oversubscription: a mesh axis at most once per spec
+            atoms = _spec_atoms(spec)
+            assert len(atoms) == len(set(atoms)), (arch, spec)
+            for dim, axis in zip(leaf.shape, entries):
+                # divisibility: every assignment divides its dim
+                assert dim % axis_size(policy, axis) == 0, \
+                    (arch, gran, leaf.shape, spec)
+                # odd vocabs replicate rather than fail to lower
+                if dim in ODD_VOCABS and axis_size(policy, axis) > 1:
+                    raise AssertionError((arch, dim, spec))
+
+
+def test_fix_divisibility_properties():
+    """_fix_divisibility never raises, keeps dividing assignments, and
+    replicates (None) every non-dividing one — across random shapes/specs
+    and both mesh forms (seeded sweep, deterministic)."""
+    rng = np.random.default_rng(0)
+    axes_pool = [None, "data", "model", "pod", ("data", "model"),
+                 ("pod", "data"), ("pod", "data", "model")]
+    for mcfg in MESHES:
+        policy = ShardingPolicy(configs.get_config("tinyllama-1.1b"), mcfg)
+        for _ in range(300):
+            ndim = int(rng.integers(0, 5))
+            shape = tuple(int(rng.choice([1, 2, 7, 16, 32, 51866, 32001,
+                                          4096, 100]))
+                          for _ in range(ndim))
+            spec = tuple(axes_pool[int(rng.integers(len(axes_pool)))]
+                         for _ in range(ndim))
+            fixed = policy._fix_divisibility(spec, shape)
+            assert len(fixed) == ndim
+            for dim, before, after in zip(shape, spec, fixed):
+                if dim % axis_size(policy, before) == 0:
+                    assert after == before        # dividing: untouched
+                else:
+                    assert after is None          # non-dividing: replicate
+                assert dim % axis_size(policy, after) == 0
