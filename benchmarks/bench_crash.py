@@ -3,6 +3,8 @@ progress and SAMPLE() latency before / during / after the crash wave."""
 
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
 from benchmarks.common import emit
@@ -55,4 +57,7 @@ def run(quick: bool = True):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI variant: n=50 / 900 s instead of n=100 / 1800 s")
+    run(quick=ap.parse_args().quick)

@@ -23,6 +23,12 @@ int8 codes on 1 device and on an 8-way forced host-platform mesh — the
 ``sharded`` rows carry a codes checksum from each device count so the
 artifact records the equivalence, not just the timing.
 
+A fifth rides along since secure aggregation (docs/SECUREAGG.md): the
+``sharded`` rows also time the fused unmask→aggregate→quantize path
+against the plain fused path (``secure_overhead_x``) and record its
+codes checksum — masked and plain must be bit-identical at every device
+count when all senders survive.
+
 ``--quick`` runs the CI-sized subset and still emits the full JSON.
 """
 
@@ -189,6 +195,29 @@ def _sharded_row(reps: int) -> dict:
                                       shardings=shardings)
     ms_q = _time(lambda: aggregate_flatmodel(
         fms, w, spec=spec, quantize=True, shardings=shardings)[1], reps)
+
+    # secure-agg overhead: the fused unmask→aggregate→quantize path
+    # (docs/SECUREAGG.md) vs the plain fused path, same stack. Masking is
+    # free by construction on the wire side; this row prices the in-kernel
+    # PRG + uint32 unmask-add the aggregator pays, and the codes digest
+    # doubles as the masked/plain bit-identity record per device count.
+    from repro.kernels.ops import masked_aggregate_flatmodel
+    from repro.secureagg import PairwiseMasker
+
+    masker = PairwiseMasker(0)
+    roster = tuple(f"n{i}" for i in range(len(fms)))
+    sealed = [masker.seal(fm, roster[i], 7, roster, spec.nbytes)
+              for i, fm in enumerate(fms)]
+    secrets = {nid: masker.secret(nid, 7) for nid in roster}
+    seeds, signs = masker.unmask_matrices(sealed, secrets)
+    payloads = [sm.payload for sm in sealed]
+    _, mcodes, _ = masked_aggregate_flatmodel(
+        payloads, w, seeds=seeds, signs=signs, spec=spec, quantize=True,
+        shardings=shardings)
+    ms_mq = _time(lambda: masked_aggregate_flatmodel(
+        payloads, w, seeds=seeds, signs=signs, spec=spec, quantize=True,
+        shardings=shardings)[1], reps)
+
     return {
         "model": "paper-cnn", "P": 5, "devices": jax.device_count(),
         "model_shards": shards,
@@ -196,8 +225,12 @@ def _sharded_row(reps: int) -> dict:
         "local_tile": tile_for(local_n, 5),
         "onepass_ms": round(ms_one, 2),
         "fused_agg_quant_ms": round(ms_q, 2),
+        "secure_fused_agg_quant_ms": round(ms_mq, 2),
+        "secure_overhead_x": round(ms_mq / ms_q, 2),
         "codes_sha256": hashlib.sha256(
             np.asarray(codes).tobytes()).hexdigest()[:16],
+        "secure_codes_sha256": hashlib.sha256(
+            np.asarray(mcodes).tobytes()).hexdigest()[:16],
     }
 
 
@@ -265,6 +298,11 @@ def run(quick: bool = True):
                                      for r in cohort_rows),
             "sharded_codes_identical": len(
                 {r["codes_sha256"] for r in sharded_rows}) == 1,
+            "secure_agg_overhead_x": sharded_rows[0]["secure_overhead_x"],
+            "secure_codes_identical": len(
+                {sha for r in sharded_rows
+                 for sha in (r["codes_sha256"],
+                             r["secure_codes_sha256"])}) == 1,
         },
     }
     with open(out_path("BENCH_kernels.json"), "w") as fh:

@@ -101,7 +101,7 @@ RULES = {
             "silently do not apply and conformance schedules stop "
             "covering the code path."
         ),
-        paths=("src/repro/sim", "src/repro/core"),
+        paths=("src/repro/sim", "src/repro/core", "src/repro/secureagg"),
         exclude=("src/repro/sim/network.py",),
     ),
     "DL005": Rule(

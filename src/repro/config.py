@@ -171,6 +171,13 @@ class ModestConfig:
     # every fault-injected run exercises the hardened path. True/False
     # force it on/off regardless.
     failover: object = "auto"        # "auto" | True | False
+    # Secure aggregation (repro.secureagg, docs/SECUREAGG.md): "masked"
+    # seals every model push under pairwise masks with threshold-gated
+    # Shamir recovery — only masked bit patterns travel, and the
+    # aggregator unmasks only once >= t shares survive. None (default)
+    # is the plain protocol: no extra messages, no extra bytes, golden
+    # trajectories byte-identical to pre-secureagg builds.
+    secure_agg: Optional[str] = None  # None | "masked"
 
 
 @dataclass(frozen=True)

@@ -89,15 +89,23 @@ class ModelPayload:
 
 @dataclass
 class TrainMsg(Message):
-    """Aggregator -> participant: train on this model (Alg. 4 ``train``)."""
+    """Aggregator -> participant: train on this model (Alg. 4 ``train``).
+
+    ``roster`` is the full sampled cohort S^k, piggybacked only when
+    secure aggregation is on (``ModestConfig.secure_agg``): each trainer
+    needs the roster to derive pairwise mask seeds and to address its
+    Shamir shares. Empty by default so plain sessions pay zero extra
+    wire bytes and golden trajectories are untouched.
+    """
 
     round_k: int = 0
     model: ModelPayload = field(default_factory=ModelPayload)
     view: Optional[View] = None
+    roster: tuple = ()
 
     def size_bytes(self) -> int:
         v = self.view.size_bytes() if self.view else 0
-        return HEADER_BYTES + self.model.size_bytes() + v
+        return HEADER_BYTES + self.model.size_bytes() + v + 8 * len(self.roster)
 
 
 @dataclass
@@ -111,3 +119,67 @@ class AggregateMsg(Message):
     def size_bytes(self) -> int:
         v = self.view.size_bytes() if self.view else 0
         return HEADER_BYTES + self.model.size_bytes() + v
+
+
+# --------------------------------------------------------------------------
+# Secure aggregation (repro.secureagg, docs/SECUREAGG.md). All four kinds
+# travel through the one ``Network.send -> injector.transit`` interception
+# point like every other protocol message, so fault schedules see them and
+# ``usage_summary()`` accounts their bytes.
+
+
+@dataclass
+class MaskedModelMsg(AggregateMsg):
+    """Participant -> aggregator: my updated model under a pairwise mask.
+
+    Subclasses :class:`AggregateMsg` (same round/model/view slots and the
+    same receive path — ack, view merge, stale/duplicate guards) but the
+    payload's ``params`` is a ``repro.secureagg.masking.SealedModel``:
+    only masked bit patterns are on the wire. ``roster`` names the cohort
+    the mask was built over; the aggregator groups rows by roster.
+    """
+
+    roster: tuple = ()
+
+    def size_bytes(self) -> int:
+        return super().size_bytes() + 8 * len(self.roster)
+
+
+@dataclass
+class ShareMsg(Message):
+    """Trainer -> cohort member: one Shamir share of my per-round mask
+    secret (modelled as pairwise-encrypted opaque bytes: 8B owner id +
+    2B share index + 8B field element + AEAD overhead)."""
+
+    round_k: int = 0
+    owner: str = ""
+    share: tuple = (0, 0)            # (x, y) over the Shamir field
+
+    def size_bytes(self) -> int:
+        return HEADER_BYTES + 34
+
+
+@dataclass
+class UnmaskReq(Message):
+    """Aggregator -> survivors: round-k models collected from
+    ``survivors``; send me the shares you hold so the masks can be
+    removed (threshold-gated, see docs/SECUREAGG.md)."""
+
+    round_k: int = 0
+    roster: tuple = ()
+    survivors: tuple = ()
+
+    def size_bytes(self) -> int:
+        return HEADER_BYTES + 8 * (len(self.roster) + len(self.survivors))
+
+
+@dataclass
+class UnmaskShareMsg(Message):
+    """Survivor -> aggregator: the Shamir shares this node holds for the
+    round (one ``(owner, x, y)`` triple per roster member heard from)."""
+
+    round_k: int = 0
+    shares: tuple = ()               # ((owner, x, y), ...)
+
+    def size_bytes(self) -> int:
+        return HEADER_BYTES + 24 * len(self.shares)

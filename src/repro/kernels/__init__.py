@@ -23,12 +23,16 @@ from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.fused import (  # noqa: F401
     aggregate_flat_onepass,
     aggregate_quantize_flat,
+    apply_mask_flat,
+    unmask_aggregate_flat,
+    unmask_aggregate_quantize_flat,
 )
 from repro.kernels.ops import (  # noqa: F401
     aggregate_flat,
     aggregate_flatmodel,
     aggregate_pytree,
     dequantize_flat,
+    masked_aggregate_flatmodel,
     quantize_flat,
     quantized_delta_pull,
     quantized_delta_push,

@@ -259,3 +259,291 @@ def aggregate_quantize_flat_sharded(x, w, int_mask=None, *, mesh,
     mean, q, s = _sharded_onepass(mesh, model_axis, True, use_kernel,
                                   interpret)(xp, w, mp)
     return mean[:n], q[:n], s[: -(-n // SUBTILE)]
+
+
+# ---------------------------------------------------------------------------
+# Secure-aggregation variants: in-kernel mask PRG + exact unmask
+# (repro.secureagg, docs/SECUREAGG.md)
+# ---------------------------------------------------------------------------
+#
+# A trainer seals its flat buffer by shifting the fp32 *bit patterns*
+# additively in the uint32 ring; the aggregator removes the shift exactly
+# (ring subtraction) and then runs the IDENTICAL aggregate→quantize math,
+# so masked results are bit-identical to the plain kernels — an fp-domain
+# mask could never be (fp addition is non-associative).
+#
+# The PRG is counter-based with the *global* lane index as counter
+# (program_id·tile + iota on one device, plus axis_index·local_n under
+# shard_map), so mask words are independent of tiling and sharding and
+# the sealed buffer a trainer produced on one device unmasks on any mesh.
+# It mirrors ``repro.secureagg.prg.prg_word`` bit-exactly — change both
+# together (tests/test_secureagg.py pins them against each other).
+
+_PRG_MIX1 = 0x7FEB352D
+_PRG_MIX2 = 0x846CA68B
+
+
+def _mix32(x):
+    x = (x ^ (x >> 16)) * jnp.uint32(_PRG_MIX1)
+    x = (x ^ (x >> 15)) * jnp.uint32(_PRG_MIX2)
+    return x ^ (x >> 16)
+
+
+def _prg_u32(seed, ctr):
+    x = ctr ^ (seed * jnp.uint32(_PRG_MIX1))
+    x = _mix32(x) + seed
+    return _mix32(x)
+
+
+def _mask_words(seeds, signs, lanes):
+    """sum_j sign_j · PRG(seed_j, lane) in the uint32 ring.
+
+    seeds/signs: (..., R); lanes: broadcastable uint32 counters. A −1
+    sign cast to uint32 is 2^32−1, i.e. ring negation — no branching.
+    """
+    words = _prg_u32(seeds[..., :, None].astype(jnp.uint32),
+                     lanes[..., None, :])                  # (..., R, L)
+    sgn = signs[..., :, None].astype(jnp.uint32)
+    return jnp.sum(words * sgn, axis=-2, dtype=jnp.uint32)  # (..., L)
+
+
+@jax.jit
+def apply_mask_flat(buf, seeds, signs):
+    """Seal a flat fp32 buffer: bits(buf) ⊞ mask, lane l = PRG counter l.
+
+    Exact inverse: ``apply_mask_flat(sealed, seeds, -signs)``.
+    """
+    lanes = jnp.arange(buf.shape[0], dtype=jnp.uint32)
+    y = jax.lax.bitcast_convert_type(buf, jnp.uint32)
+    y = y + _mask_words(seeds, signs, lanes)
+    return jax.lax.bitcast_convert_type(y, jnp.float32)
+
+
+def _unmask_bits(y_f32, seeds, signs, lanes, n_valid):
+    """Remove each row's mask (uint32 ring) and bitcast back to fp32.
+
+    y: (P, L) masked bit patterns as fp32; seeds/signs: (P, R); lanes:
+    (1, L) global lane counters. Lanes >= n_valid were never masked
+    (kernel padding) and pass through untouched, so pad lanes stay exact
+    fp32 zeros and the downstream math sees exactly what the plain
+    kernels see.
+    """
+    y = jax.lax.bitcast_convert_type(y_f32, jnp.uint32)
+    mask = jnp.zeros_like(y)
+    for j in range(seeds.shape[1]):               # R is small and static
+        words = _prg_u32(seeds[:, j:j + 1].astype(jnp.uint32), lanes)
+        mask = mask + words * signs[:, j:j + 1].astype(jnp.uint32)
+    x = jnp.where(lanes < jnp.uint32(n_valid), y - mask, y)
+    return jax.lax.bitcast_convert_type(x, jnp.float32)
+
+
+def _unmask_agg_kernel(w_ref, y_ref, m_ref, seed_ref, sign_ref, base_ref,
+                       o_ref, *, tile, n_valid):
+    i = pl.program_id(0)
+    lanes = (base_ref[...][0, 0]
+             + (i * tile + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+                ).astype(jnp.uint32))
+    x = _unmask_bits(y_ref[...], seed_ref[...], sign_ref[...], lanes, n_valid)
+    w = w_ref[...].astype(jnp.float32)
+    total = jnp.sum(w)
+    acc = jnp.sum(x * w, axis=0) / total
+    int_mask = m_ref[...][0]
+    acc = jnp.where(int_mask > 0, jnp.round(acc), acc)
+    o_ref[...] = acc[None]
+
+
+def _unmask_agg_quant_kernel(w_ref, y_ref, m_ref, seed_ref, sign_ref,
+                             base_ref, o_ref, q_ref, s_ref, *, tile, n_valid):
+    i = pl.program_id(0)
+    lanes = (base_ref[...][0, 0]
+             + (i * tile + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+                ).astype(jnp.uint32))
+    x = _unmask_bits(y_ref[...], seed_ref[...], sign_ref[...], lanes, n_valid)
+    w = w_ref[...].astype(jnp.float32)
+    total = jnp.sum(w)
+    acc = jnp.sum(x * w, axis=0) / total
+    int_mask = m_ref[...][0]
+    acc = jnp.where(int_mask > 0, jnp.round(acc), acc)
+    o_ref[...] = acc[None]
+    tiles = acc.reshape(-1, SUBTILE)
+    scale = jnp.maximum(jnp.max(jnp.abs(tiles), axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(tiles / scale[:, None]), -127, 127)
+    q_ref[...] = q.reshape(1, -1).astype(jnp.int8)
+    s_ref[...] = scale[None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile", "n_valid", "interpret"))
+def _unmask_tiles(y, w, int_mask, seeds, signs, base, *, tile: int,
+                  n_valid: int, interpret: bool):
+    P, N = y.shape
+    R = seeds.shape[1]
+    return pl.pallas_call(
+        functools.partial(_unmask_agg_kernel, tile=tile, n_valid=n_valid),
+        grid=(N // tile,),
+        in_specs=[
+            pl.BlockSpec((P, 1), lambda i: (0, 0)),
+            pl.BlockSpec((P, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((P, R), lambda i: (0, 0)),
+            pl.BlockSpec((P, R), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, N), jnp.float32),
+        interpret=interpret,
+    )(w[:, None], y, int_mask[None], seeds, signs, base)[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile", "n_valid", "interpret"))
+def _unmask_quant_tiles(y, w, int_mask, seeds, signs, base, *, tile: int,
+                        n_valid: int, interpret: bool):
+    P, N = y.shape
+    R = seeds.shape[1]
+    sub = tile // SUBTILE
+    mean, q, s = pl.pallas_call(
+        functools.partial(_unmask_agg_quant_kernel, tile=tile,
+                          n_valid=n_valid),
+        grid=(N // tile,),
+        in_specs=[
+            pl.BlockSpec((P, 1), lambda i: (0, 0)),
+            pl.BlockSpec((P, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((P, R), lambda i: (0, 0)),
+            pl.BlockSpec((P, R), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, sub), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, N), jnp.float32),
+            jax.ShapeDtypeStruct((1, N), jnp.int8),
+            jax.ShapeDtypeStruct((1, N // SUBTILE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w[:, None], y, int_mask[None], seeds, signs, base)
+    return mean[0], q[0], s[0]
+
+
+_ZERO_BASE = None
+
+
+def _zero_base():
+    global _ZERO_BASE
+    if _ZERO_BASE is None:
+        _ZERO_BASE = jnp.zeros((1, 1), jnp.uint32)
+    return _ZERO_BASE
+
+
+def unmask_aggregate_flat(y, w, int_mask=None, *, seeds, signs,
+                          interpret: bool = False):
+    """Fused unmask→aggregate: y (P, N) sealed fp32 rows, seeds/signs
+    (P, R) per-row mask derivation → mean (N,), bit-identical to
+    :func:`aggregate_flat_onepass` on the unsealed rows."""
+    P, N = y.shape
+    if int_mask is None:
+        int_mask = jnp.zeros((N,), jnp.float32)
+    tile = tile_for(N, P)
+    yp, mp, n = _pad_flat(y, jnp.asarray(int_mask, jnp.float32), tile)
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    signs = jnp.asarray(signs, jnp.int32)
+    return _unmask_tiles(yp, w, mp, seeds, signs, _zero_base(), tile=tile,
+                         n_valid=n, interpret=interpret)[:n]
+
+
+def unmask_aggregate_quantize_flat(y, w, int_mask=None, *, seeds, signs,
+                                   interpret: bool = False):
+    """Fused unmask→aggregate→quantize: (mean, int8 codes, scales) bit-
+    identical to :func:`aggregate_quantize_flat` on the unsealed rows."""
+    P, N = y.shape
+    if int_mask is None:
+        int_mask = jnp.zeros((N,), jnp.float32)
+    tile = tile_for(N, P)
+    yp, mp, n = _pad_flat(y, jnp.asarray(int_mask, jnp.float32), tile)
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    signs = jnp.asarray(signs, jnp.int32)
+    mean, q, s = _unmask_quant_tiles(yp, w, mp, seeds, signs, _zero_base(),
+                                     tile=tile, n_valid=n,
+                                     interpret=interpret)
+    return mean[:n], q[:n], s[: -(-n // SUBTILE)]
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_unmask(mesh, model_axis: str, quantize: bool, use_kernel: bool,
+                    interpret: bool, n_valid: int):
+    """jit(shard_map) unmask→aggregate per model-axis shard.
+
+    Each shard's PRG counters start at ``axis_index · local_n`` — with
+    :func:`shard_align` padding, shard r holds exactly the contiguous
+    global lanes [r·local_n, (r+1)·local_n), so the regenerated mask
+    words match what the (single-device) sealer produced and the
+    unmasked values — hence the downstream mean/codes/scales — are
+    bit-identical to the single-device masked path and to the plain
+    sharded path.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def local(y, w, m, seeds, signs):
+        local_n = y.shape[1]
+        base = (jax.lax.axis_index(model_axis).astype(jnp.uint32)
+                * jnp.uint32(local_n)).reshape(1, 1)
+        if use_kernel:
+            tile = tile_for(local_n, y.shape[0])
+            if quantize:
+                return _unmask_quant_tiles(y, w, m, seeds, signs, base,
+                                           tile=tile, n_valid=n_valid,
+                                           interpret=interpret)
+            return (_unmask_tiles(y, w, m, seeds, signs, base, tile=tile,
+                                  n_valid=n_valid, interpret=interpret),)
+        lanes = base[0] + jnp.arange(local_n, dtype=jnp.uint32)[None, :]
+        x = _unmask_bits(y, seeds, signs, lanes, n_valid)
+        # identical local block to _sharded_onepass's jnp path
+        total = jnp.sum(w)
+        mean = jnp.tensordot(w, x, axes=(0, 0)) / total
+        mean = jnp.where(m > 0, jnp.round(mean), mean)
+        if not quantize:
+            return (mean,)
+        t = mean.reshape(-1, SUBTILE)
+        scale = jnp.maximum(jnp.max(jnp.abs(t), axis=1), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(t / scale[:, None]), -127, 127)
+        return mean, q.reshape(-1).astype(jnp.int8), scale
+
+    M = model_axis
+    f = shard_map(local, mesh=mesh,
+                  in_specs=(P(None, M), P(None), P(M), P(None, None),
+                            P(None, None)),
+                  out_specs=tuple([P(M)] * (3 if quantize else 1)),
+                  check_rep=False)
+    return jax.jit(f)
+
+
+def unmask_aggregate_flat_sharded(y, w, int_mask=None, *, seeds, signs,
+                                  mesh, model_axis: str = "model",
+                                  use_kernel: bool = True,
+                                  interpret: bool = False):
+    """Sharded :func:`unmask_aggregate_flat` (see :func:`_sharded_unmask`)."""
+    yp, mp, n = _pad_sharded(y, int_mask, mesh, model_axis)
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    signs = jnp.asarray(signs, jnp.int32)
+    (mean,) = _sharded_unmask(mesh, model_axis, False, use_kernel,
+                              interpret, n)(yp, w, mp, seeds, signs)
+    return mean[:n]
+
+
+def unmask_aggregate_quantize_flat_sharded(y, w, int_mask=None, *, seeds,
+                                           signs, mesh,
+                                           model_axis: str = "model",
+                                           use_kernel: bool = True,
+                                           interpret: bool = False):
+    """Sharded :func:`unmask_aggregate_quantize_flat`."""
+    yp, mp, n = _pad_sharded(y, int_mask, mesh, model_axis)
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    signs = jnp.asarray(signs, jnp.int32)
+    mean, q, s = _sharded_unmask(mesh, model_axis, True, use_kernel,
+                                 interpret, n)(yp, w, mp, seeds, signs)
+    return mean[:n], q[:n], s[: -(-n // SUBTILE)]

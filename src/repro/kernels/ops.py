@@ -17,7 +17,11 @@ from repro.kernels.aggregate import TILE, aggregate_tiles
 from repro.kernels.fused import (SUBTILE, aggregate_flat_onepass,
                                  aggregate_flat_onepass_sharded,
                                  aggregate_quantize_flat,
-                                 aggregate_quantize_flat_sharded)
+                                 aggregate_quantize_flat_sharded,
+                                 unmask_aggregate_flat,
+                                 unmask_aggregate_flat_sharded,
+                                 unmask_aggregate_quantize_flat,
+                                 unmask_aggregate_quantize_flat_sharded)
 from repro.kernels.quantize import dequantize_tiles, quantize_tiles
 from repro.utils.pytree import check_aggregation_weights as _check_weights
 
@@ -180,6 +184,79 @@ def aggregate_flatmodel(models, weights=None, *, spec=None, quantize=False,
         mask = int_mask if int_mask is not None else jnp.zeros((), jnp.bool_)
         mean = _jnp_onepass(spec.n, spec.has_int)(x, w, mask)
     return FlatModel(mean, spec)
+
+
+def masked_aggregate_flatmodel(models, weights=None, *, seeds, signs,
+                               spec=None, quantize=False, interpret=None,
+                               use_kernel=None, shardings=None):
+    """Secure-aggregation twin of :func:`aggregate_flatmodel`.
+
+    ``models`` are FlatModels whose buffers hold *sealed* bit patterns
+    (``repro.secureagg.masking``); ``seeds``/``signs`` are the per-row
+    ``(P, R)`` mask-derivation matrices from
+    ``PairwiseMasker.unmask_matrices``. The kernels regenerate each
+    row's mask from its seeds, remove it exactly in the uint32 ring and
+    run the identical aggregate(→quantize) math — mean/codes/scales are
+    bit-identical to :func:`aggregate_flatmodel` on the unsealed rows,
+    on every dispatch path (kernel, jnp, sharded).
+    """
+    if weights is None:
+        weights = [1.0] * len(models)
+    _check_weights(weights)
+    if spec is None:
+        spec = models[0].spec
+    y = jnp.stack([as_buffer(m, spec) for m in models])
+    w = jnp.asarray(weights, jnp.float32)
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    signs = jnp.asarray(signs, jnp.int32)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    interpret = _default_interpret() if interpret is None else interpret
+    int_mask = jnp.asarray(spec.int_mask) if spec.has_int else None
+    if shardings is not None and shardings.n_shards > 1:
+        mask = (int_mask.astype(jnp.float32) if int_mask is not None
+                else None)
+        if quantize:
+            mean, codes, scales = unmask_aggregate_quantize_flat_sharded(
+                y, w, mask, seeds=seeds, signs=signs, mesh=shardings.mesh,
+                model_axis=shardings.model_axis,
+                use_kernel=use_kernel, interpret=interpret)
+            return FlatModel(mean, spec), codes, scales
+        mean = unmask_aggregate_flat_sharded(
+            y, w, mask, seeds=seeds, signs=signs, mesh=shardings.mesh,
+            model_axis=shardings.model_axis,
+            use_kernel=use_kernel, interpret=interpret)
+        return FlatModel(mean, spec)
+    if use_kernel:
+        mask = (int_mask.astype(jnp.float32) if int_mask is not None
+                else jnp.zeros((spec.n,), jnp.float32))
+        if quantize:
+            mean, codes, scales = unmask_aggregate_quantize_flat(
+                y, w, mask, seeds=seeds, signs=signs, interpret=interpret)
+            return FlatModel(mean, spec), codes, scales
+        mean = unmask_aggregate_flat(y, w, mask, seeds=seeds, signs=signs,
+                                     interpret=interpret)
+        return FlatModel(mean, spec)
+    # jnp path: exact ring unmask, then the SAME _jnp_onepass* contraction
+    # the plain path runs — bit-identity by construction.
+    x = _jnp_unmask_stack(spec.n)(y, seeds, signs)
+    mask = int_mask if int_mask is not None else jnp.zeros((), jnp.bool_)
+    if quantize:
+        mean, codes, scales = _jnp_onepass_quant(spec.n, spec.has_int)(
+            x, w, mask)
+        return FlatModel(mean, spec), codes, scales
+    return FlatModel(_jnp_onepass(spec.n, spec.has_int)(x, w, mask), spec)
+
+
+@functools.lru_cache(maxsize=64)
+def _jnp_unmask_stack(spec_n: int):
+    from repro.kernels.fused import _unmask_bits
+
+    def unmask(y, seeds, signs):
+        lanes = jnp.arange(spec_n, dtype=jnp.uint32)[None, :]
+        return _unmask_bits(y, seeds, signs, lanes, spec_n)
+
+    return jax.jit(unmask)
 
 
 def quantize_flat(x, *, interpret=None):

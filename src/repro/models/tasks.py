@@ -174,6 +174,18 @@ class JaxTask(LearningTask):
         return aggregate_flatmodel(list(models), weights,
                                    spec=self.flat_spec, shardings=shardings)
 
+    def aggregate_masked(self, models: Sequence, seeds, signs,
+                         weights: Optional[Sequence[float]] = None, *,
+                         shardings=None):
+        """Secure-agg AVG over *sealed* FlatModels (repro.secureagg): the
+        fused kernel regenerates each row's mask from ``seeds``/``signs``
+        ``(P, R)`` matrices, removes it exactly and aggregates — bit-
+        identical to :meth:`aggregate` on the unsealed rows."""
+        from repro.kernels.ops import masked_aggregate_flatmodel
+        return masked_aggregate_flatmodel(list(models), weights, seeds=seeds,
+                                          signs=signs, spec=self.flat_spec,
+                                          shardings=shardings)
+
     def aggregate_sequential(self, models: Sequence,
                              weights: Optional[Sequence[float]] = None):
         """Legacy per-leaf reference aggregation over pytrees."""

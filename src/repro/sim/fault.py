@@ -316,7 +316,11 @@ class FaultInjector:
 
     def _observe(self, src: str, dst: str, msg, now: float) -> None:
         round_k = getattr(msg, "round_k", None)
-        if round_k is None or type(msg).__name__ != "AggregateMsg":
+        # MaskedModelMsg is the secure-agg twin of AggregateMsg: a kill
+        # aimed at "whoever receives round-k models" must fire for it too,
+        # or secure sessions would dodge the targeted-kill schedules.
+        if round_k is None or type(msg).__name__ not in ("AggregateMsg",
+                                                         "MaskedModelMsg"):
             return
         for rule in self.rules:
             if not isinstance(rule, AggregatorKill):

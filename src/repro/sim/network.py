@@ -43,12 +43,13 @@ class _Flow:
     """One in-flight transfer: bytes remaining and its current fair rate."""
 
     __slots__ = ("src", "dst", "remaining", "rate", "deliver", "handle",
-                 "t_last")
+                 "t_last", "total")
 
     def __init__(self, src: str, dst: str, nbytes: float,
                  deliver: Callable[[], None], now: float):
         self.src = src
         self.dst = dst
+        self.total = float(nbytes)
         self.remaining = float(nbytes)
         self.rate = 0.0
         self.deliver = deliver
@@ -383,7 +384,16 @@ class Network:
         if not doomed:
             return 0
         seeds = []
+        now = self.sim.now
         for f in doomed:
+            # The receiver is alive — it really did take delivery of the
+            # bytes streamed up to the cut, so they count toward its
+            # ingress (unlike node_offline, where the receiving process
+            # died and nothing past the kernel buffer was ever consumed).
+            if f.rate > 0.0 and now > f.t_last:
+                f.remaining = max(0.0, f.remaining - f.rate * (now - f.t_last))
+                f.t_last = now
+            self.bytes_in[f.dst] += int(f.total - f.remaining)
             self._remove_flow(f)
             self.flows_aborted += 1
             seeds.extend((("u", f.src), ("d", f.dst)))

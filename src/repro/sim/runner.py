@@ -254,10 +254,13 @@ class ModestSession:
             server._theta_from = [server.node_id]
             server._do_aggregate(1)
         else:
-            for nid in online[:self.mcfg.sample_size]:
+            cohort = online[:self.mcfg.sample_size]
+            # Secure mode: S^1 is the mask roster of the bootstrap round.
+            roster = tuple(cohort) if self.mcfg.secure_agg else ()
+            for nid in cohort:
                 node = self.nodes[nid]
                 node.recover()              # deferred case: trace says online
-                node.self_activate(1, init)
+                node.self_activate(1, init, roster=roster)
 
     # ------------------------------------------------------------------ hooks
 

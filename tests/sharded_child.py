@@ -61,6 +61,32 @@ def fingerprint(engine: str, duration: float = 30.0):
     mean, codes, scales = aggregate_flatmodel(
         models, weights, spec=spec, quantize=True, shardings=shardings)
 
+    # secure-agg differential (docs/SECUREAGG.md acceptance): on this
+    # exact device set — 1 host device for the parent, 8 forced devices
+    # here — the fused unmask-aggregate path must be bit-identical to the
+    # plain fused path when every sender survives. Asserted in-process so
+    # the 8-device check rides the existing subprocess differential.
+    from repro.engine.flat import FlatModel
+    from repro.kernels.ops import masked_aggregate_flatmodel
+    from repro.secureagg import PairwiseMasker
+
+    masker = PairwiseMasker(0)
+    roster = tuple(f"n{i}" for i in range(len(models)))
+    sealed = [masker.seal(FlatModel(spec.pack(m), spec), roster[i], 7,
+                          roster, spec.nbytes)
+              for i, m in enumerate(models)]
+    secrets = {nid: masker.secret(nid, 7) for nid in roster}
+    seeds, signs = masker.unmask_matrices(sealed, secrets)
+    mm, mc, ms = masked_aggregate_flatmodel(
+        [sm.payload for sm in sealed], weights, seeds=seeds, signs=signs,
+        spec=spec, quantize=True, shardings=shardings)
+    assert np.array_equal(np.asarray(mean.buffer), np.asarray(mm.buffer)), \
+        "masked fused aggregate diverged from plain (mean)"
+    assert np.array_equal(np.asarray(codes), np.asarray(mc)), \
+        "masked fused aggregate diverged from plain (int8 codes)"
+    assert np.array_equal(np.asarray(scales), np.asarray(ms)), \
+        "masked fused aggregate diverged from plain (scales)"
+
     traj = {"engine": type(session.engine).__name__,
             "devices": jax.device_count(),
             "rounds": result.rounds_completed,

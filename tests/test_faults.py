@@ -328,6 +328,76 @@ def test_failover_rejoined_aggregator_rejoins_cleanly():
     assert res.rounds_completed > 30
 
 
+def test_ack_cancels_failover_watch_permanently():
+    """Regression pin (audit: AggregatorKill + Duplicate interplay): a
+    healthy Ack must cancel the trainer's failover watch for that round
+    *permanently* — duplicated Acks, later timer firings, even the acked
+    aggregator dying afterwards must not re-trigger a re-send."""
+    mcfg = ModestConfig(n_nodes=4, sample_size=1, n_aggregators=1,
+                        ping_timeout=1.0, failover=True)
+    sim, node = _bare_node(mcfg)
+    node._push_model(3, M.ModelPayload(nbytes=1000), ["1"])  # arms watch
+    node.receive(M.Ack(sender="1", round_k=4))
+    node.receive(M.Ack(sender="1", round_k=4))     # Duplicate on the ack link
+    horizon = (node.FAILOVER_TIMEOUT_MULT * node.timeout
+               * (node.FAILOVER_MAX_RETRIES + 2))
+    sim.run(until=horizon)
+    assert node.failovers == 0
+
+    # negative control: without the Ack the same watch does fire
+    sim2, node2 = _bare_node(mcfg)
+    node2._push_model(3, M.ModelPayload(nbytes=1000), ["1"])
+    sim2.run(until=horizon)
+    assert node2.failovers >= 1
+
+
+def test_no_spurious_failover_under_kill_plus_duplicate():
+    """Whole-session pin of the same audit: one aggregator killed at
+    round 4 while half the traffic duplicates. The co-aggregator keeps
+    acking/progressing, so every watch is cancelled — zero failovers,
+    full progress, duplicate guard absorbing the retransmit storm."""
+    sched = FaultSchedule(rules=(AggregatorKill(round_k=4, rejoin_after=10.0),
+                                 Duplicate(p=0.5, gap=0.4)), seed=0)
+    s = ModestSession(n_nodes=20, mcfg=MCFG, task=TASK, seed=0, fault=sched)
+    res = s.run(200.0)
+    assert res.fault_stats["aggregator_kills"] == 1
+    assert res.rounds_completed > 100
+    assert sum(n.dup_models_dropped for n in s.nodes.values()) > 50
+    assert sum(n.failovers for n in s.nodes.values()) == 0
+
+
+def test_partition_mid_transfer_charges_partial_bytes():
+    """abort_flows partial-byte accounting: a Partition cutting a flow
+    mid-transfer charges the receiver exactly the bytes streamed up to
+    the cut — more than zero, less than the payload, never minting."""
+    big = 1_000_000                     # ~1s at the 1e6 B/s harness rate
+    lat = None
+
+    class _Model(M.Message):
+        def size_bytes(self):
+            return big
+
+    h = _Harness([])                    # clean fabric; cut applied manually
+    lat = h.net.latency("0", "1")
+    h.net.send("0", "1", _Model(sender="0"))
+    cut_at = lat + 0.4                  # flow is mid-stream
+    h.sim.schedule(cut_at, lambda: h.net.abort_flows(
+        lambda src, dst: src == "0" and dst == "1"))
+    h.sim.run(until=10.0)
+    assert h.nodes["1"].got == []       # never delivered
+    got = h.net.bytes_in["1"]
+    assert 0 < got < big
+    assert got <= h.net.bytes_out["0"]  # conservation
+    assert h.net.flows_aborted == 1
+
+    # same cut through the injector's Partition path
+    h2 = _Harness([Partition(groups=(("0",),), t0=0.5, t1=5.0)])
+    h2.net.send("0", "1", _Model(sender="0"))
+    h2.sim.run(until=10.0)
+    assert h2.nodes["1"].got == []
+    assert 0 < h2.net.bytes_in["1"] < big
+
+
 def test_rounds_progress_under_bounded_loss():
     """Liveness: 20% loss + jitter + occasional retransmits still lets
     MoDeST complete rounds *throughout* the horizon (sampler retries +
