@@ -1,18 +1,30 @@
-"""Serving throughput: batched prefill + token-by-token decode on reduced
-configs (real CPU timings; the full configs are covered by the dry-run and
-its roofline decode rows)."""
+"""Serving benchmarks → ``BENCH_serve.json``.
+
+Two layers:
+
+* **decode** — batched prefill + token-by-token decode on reduced configs
+  (real CPU timings; the full configs are covered by the dry-run and its
+  roofline decode rows);
+* **sim** — the query plane of ``repro.serve`` riding on a diurnal
+  training session: MoDeST under the *steady* and *flash_crowd* request
+  regimes, reporting served-model staleness, p50/p99 request latency and
+  snapshot fan-out bytes per regime.
+
+``--quick`` is the CI variant (3 archs, n=24 / 120 s sim cells);
+``--sim-only`` skips the decode timings for fast artifact refreshes.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, out_path
 from repro import configs
-from repro.config import MeshConfig
-from repro.core.distributed import Server
 from repro.models import build
 
 
@@ -44,7 +56,7 @@ def _one(arch: str, batch_size: int, prompt: int, new_tokens: int):
     return batch_size * new_tokens / dt
 
 
-def run(quick: bool = True):
+def run_decode(quick: bool = True):
     archs = (["tinyllama-1.1b", "rwkv6-1.6b", "gemma2-27b"] if quick
              else configs.ASSIGNED)
     rows = []
@@ -56,5 +68,61 @@ def run(quick: bool = True):
     return rows
 
 
+def run_sim(quick: bool = True):
+    """Query plane on a diurnal MoDeST session, one row per serve regime.
+
+    The flash_crowd row is the launch-review latency row: a sudden
+    request pile-on (the availability generator's arrival ramp re-read
+    as query intensity) against replicas co-located with heterogeneous
+    population nodes.
+    """
+    from repro.eval import Scenario, run_scenario
+
+    n, duration = (24, 120.0) if quick else (64, 300.0)
+    rows = []
+    for regime in ("steady", "flash_crowd"):
+        sc = Scenario(algo="modest", regime="diurnal", n=n, seed=0,
+                      duration=duration, serve=regime)
+        result, _metrics = run_scenario(sc)
+        s = result.serving
+        rows.append({
+            "bench": "serve_sim", "serve": regime, "algo": "modest",
+            "n": n, "duration_s": duration,
+            "requests": s["requests"], "served": s["served"],
+            "p50_latency_s": s["p50_latency_s"],
+            "p99_latency_s": s["p99_latency_s"],
+            "staleness_mean_rounds": s["staleness_mean_rounds"],
+            "staleness_max_rounds": s["staleness_max_rounds"],
+            "snapshots_published": s["snapshots_published"],
+            "snapshot_bytes": s["snapshot_bytes"],
+            "dropped_admission": s["dropped_admission"],
+            "dropped_deadline": s["dropped_deadline"],
+        })
+    emit(rows, "serve_sim.csv")
+    return rows
+
+
+def run(quick: bool = True, sim_only: bool = False):
+    decode_rows = [] if sim_only else run_decode(quick=quick)
+    sim_rows = run_sim(quick=quick)
+    artifact = {
+        "quick": quick,
+        "decode": decode_rows,
+        "sim": sim_rows,
+        "flash_crowd": next(r for r in sim_rows
+                            if r["serve"] == "flash_crowd"),
+    }
+    with open(out_path("BENCH_serve.json"), "w") as fh:
+        json.dump(artifact, fh, indent=2, allow_nan=False)
+    print(f"wrote {out_path('BENCH_serve.json')}")
+    return artifact
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI variant: 3 archs, n=24 / 120 s sim cells")
+    ap.add_argument("--sim-only", action="store_true",
+                    help="skip the CPU decode timings")
+    args = ap.parse_args()
+    run(quick=args.quick, sim_only=args.sim_only)

@@ -101,7 +101,8 @@ RULES = {
             "silently do not apply and conformance schedules stop "
             "covering the code path."
         ),
-        paths=("src/repro/sim", "src/repro/core", "src/repro/secureagg"),
+        paths=("src/repro/sim", "src/repro/core", "src/repro/secureagg",
+               "src/repro/serve"),
         exclude=("src/repro/sim/network.py",),
     ),
     "DL005": Rule(

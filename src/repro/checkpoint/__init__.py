@@ -1,6 +1,21 @@
 """Pytree checkpointing to .npz with JSON metadata (orbax is unavailable
 offline). Keys are '/'-joined tree paths, so restore round-trips any nested
 dict/list/namedtuple structure produced by the models and optimizers.
+
+Two safety rails on the key scheme:
+
+* a dict key that itself contains ``'/'`` (e.g. the engine's ``attn/wo``
+  leaf names) can flatten to the same npz key as a genuinely nested path —
+  ``save`` detects the collision and raises instead of silently letting
+  the later array overwrite the earlier one;
+* ``restore`` names the missing key (and previews the checkpoint's actual
+  keys) when the template has leaves the checkpoint lacks.
+
+``restore`` also accepts ``shardings=`` — a single ``jax.sharding``
+placement for every leaf, a pytree of per-leaf placements matching the
+template, or a :class:`repro.sharding.FlatShardings` (its ``replicated``
+sharding, the saxml-style servable load onto a device mesh). Restored
+leaves are ``device_put`` accordingly; ``None`` keeps host arrays.
 """
 
 from __future__ import annotations
@@ -20,13 +35,27 @@ def _flatten(tree) -> dict:
     """npz can't store ml_dtypes (bfloat16/f8): store a bit-view plus the
     real dtype name under a parallel '__dtype__/' key."""
     flat = {}
+    origin = {}          # npz key -> tree path parts, for collision errors
+
+    def put(key, parts, arr):
+        if key in flat:
+            raise ValueError(
+                f"checkpoint key collision: tree paths {origin[key]!r} and "
+                f"{parts!r} both flatten to npz key {key!r} — a dict key "
+                "containing '/' is indistinguishable from a nested path in "
+                "the flat namespace; rename the offending key")
+        flat[key] = arr
+        origin[key] = parts
+
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(_path_str(p) for p in path)
+        parts = tuple(_path_str(p) for p in path)
+        key = "/".join(parts)
         arr = np.asarray(leaf)
         if arr.dtype.char not in _NPZ_NATIVE:
-            flat["__dtype__/" + key] = np.array(str(arr.dtype))
+            put("__dtype__/" + key, ("__dtype__",) + parts,
+                np.array(str(arr.dtype)))
             arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
-        flat[key] = arr
+        put(key, parts, arr)
     return flat
 
 
@@ -50,24 +79,78 @@ def save(path: str, tree, meta: Optional[dict] = None) -> None:
         json.dump(meta or {}, fh)
 
 
-def restore(path: str, like) -> Tuple[Any, dict]:
-    """Restore into the structure of ``like`` (a template pytree)."""
+def _leaf_sharding(shardings, leaf_index: int, leaves):
+    """Resolve the per-leaf placement from the ``shardings`` argument."""
+    if shardings is None:
+        return None
+    # FlatShardings (repro.sharding): pytree leaves load replicated over
+    # the mesh — the flat (N,) layouts apply to packed buffers, not to
+    # individual leaves (duck-typed to avoid importing jax mesh machinery
+    # here).
+    if hasattr(shardings, "replicated") and hasattr(shardings, "mesh"):
+        return shardings.replicated
+    if isinstance(shardings, jax.sharding.Sharding):
+        return shardings
+    sh_leaves = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+    if len(sh_leaves) != len(leaves):
+        raise ValueError(
+            f"shardings pytree has {len(sh_leaves)} leaves for a template "
+            f"with {len(leaves)} leaves")
+    return sh_leaves[leaf_index]
+
+
+def restore(path: str, like, *, shardings=None) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (a template pytree).
+
+    ``shardings`` (optional) places restored leaves on devices: a single
+    ``jax.sharding.Sharding``, a matching pytree of them, or a
+    ``FlatShardings`` whose ``replicated`` placement is used for every
+    leaf (docs/SHARDING.md, docs/SERVE.md).
+
+    ``like`` may be a :class:`~repro.engine.flat.FlatModel`: the
+    checkpoint restores into its pytree and re-packs, and with a
+    ``FlatShardings`` the packed buffer lands on the flat ``vec`` layout.
+    """
+    from repro.engine.flat import FlatModel
+
+    if isinstance(like, FlatModel):
+        tree, meta = restore(path, like.tree, shardings=shardings)
+        model = FlatModel.pack(tree, like.spec)
+        if (shardings is not None and hasattr(shardings, "vec")
+                and hasattr(shardings, "mesh")):
+            model = FlatModel(jax.device_put(model.buffer, shardings.vec),
+                              like.spec)
+        return model, meta
+
     npz = np.load(path if path.endswith(".npz") else path + ".npz")
     leaves, treedef = jax.tree_util.tree_flatten(like)
     paths = jax.tree_util.tree_flatten_with_path(like)[0]
     out = []
-    for (path_elems, leaf) in paths:
+    for i, (path_elems, leaf) in enumerate(paths):
         key = "/".join(_path_str(p) for p in path_elems)
+        if key not in npz:
+            avail = sorted(k for k in npz.files
+                           if not k.startswith("__dtype__/"))
+            preview = ", ".join(avail[:8]) + (", ..." if len(avail) > 8
+                                              else "")
+            raise KeyError(
+                f"template leaf {key!r} not in checkpoint {path!r}; the "
+                f"checkpoint has {len(avail)} keys: {preview or '(none)'}")
         arr = npz[key]
         dkey = "__dtype__/" + key
         if dkey in npz:
-            import ml_dtypes  # ships with jax
+            import ml_dtypes  # noqa: F401  # ships with jax
 
             arr = arr.view(np.dtype(str(npz[dkey])))
         if arr.shape != tuple(leaf.shape):
             raise ValueError(f"checkpoint/template shape mismatch at {key}: "
                              f"{arr.shape} vs {leaf.shape}")
-        out.append(arr.astype(leaf.dtype))
+        restored = arr.astype(leaf.dtype)
+        sh = _leaf_sharding(shardings, i, leaves)
+        if sh is not None:
+            restored = jax.device_put(restored, sh)
+        out.append(restored)
     meta = {}
     mp = _meta_path(path)
     if os.path.exists(mp):

@@ -183,3 +183,54 @@ class UnmaskShareMsg(Message):
 
     def size_bytes(self) -> int:
         return HEADER_BYTES + 24 * len(self.shares)
+
+
+# --------------------------------------------------------------------------
+# Serving (repro.serve, docs/SERVE.md). Snapshots, queries and responses
+# all travel through ``Network.send`` like protocol traffic, so contention
+# shapes them, fault schedules see them, and ``usage_summary()`` accounts
+# their bytes per message type (``SnapshotMsg`` rows are the snapshot
+# fan-out cost; ``RequestMsg``/``ResponseMsg`` rows are the query plane).
+
+
+@dataclass
+class SnapshotMsg(Message):
+    """Training frontier -> serving replica: the round-k servable snapshot
+    (full model payload; replicas install monotonically by round)."""
+
+    round_k: int = 0
+    model: ModelPayload = field(default_factory=ModelPayload)
+
+    def size_bytes(self) -> int:
+        return HEADER_BYTES + 8 + self.model.size_bytes()
+
+
+@dataclass
+class RequestMsg(Message):
+    """Query client -> replica: one inference request for ``method``.
+    ``nbytes`` is the opaque request body (tokens/features); the replica's
+    admission queue may still reject it (see ResponseMsg.dropped)."""
+
+    req_id: int = 0
+    method: str = "predict"
+    nbytes: int = 1024
+
+    def size_bytes(self) -> int:
+        return HEADER_BYTES + 16 + self.nbytes
+
+
+@dataclass
+class ResponseMsg(Message):
+    """Replica -> client: the answer (``dropped == ""``) carrying the
+    round of the snapshot that served it, or a small rejection notice
+    (``"admission"`` queue full / ``"deadline"`` expired in queue /
+    ``"unloaded"`` no snapshot installed yet)."""
+
+    req_id: int = 0
+    round_k: int = 0                 # round of the serving snapshot
+    nbytes: int = 1024
+    dropped: str = ""
+
+    def size_bytes(self) -> int:
+        body = 0 if self.dropped else self.nbytes
+        return HEADER_BYTES + 16 + body

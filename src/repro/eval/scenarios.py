@@ -110,6 +110,7 @@ class Scenario:
     target_round: int = 20            # time-to-accuracy proxy round
     contention: bool = True
     fault: Optional[str] = None       # key of FAULT_REGIMES (None = clean)
+    serve: Optional[str] = None       # key of SERVE_REGIMES (None = no query plane)
 
     def profile(self):
         try:
@@ -129,6 +130,17 @@ class Scenario:
                              f"one of {sorted(FAULT_REGIMES)}") from None
         return factory(self.seed, self.duration, self.n)
 
+    def serve_config(self):
+        if self.serve is None:
+            return None
+        from repro.serve import SERVE_REGIMES
+        try:
+            factory = SERVE_REGIMES[self.serve]
+        except KeyError:
+            raise ValueError(f"unknown serve regime {self.serve!r}; "
+                             f"one of {sorted(SERVE_REGIMES)}") from None
+        return factory(self.n, self.seed, self.duration)
+
 
 def run_scenario(sc: Scenario, *, task=None, data=None,
                  target: Optional[float] = None,
@@ -147,7 +159,7 @@ def run_scenario(sc: Scenario, *, task=None, data=None,
     t0 = time.perf_counter()  # noqa: DL002(wall_s is host benchmark timing, never simulation semantics)
     session = session_cls(profile=sc.profile(), task=task, data=data,
                           seed=sc.seed, contention=sc.contention,
-                          fault=sc.fault_schedule())
+                          fault=sc.fault_schedule(), serve=sc.serve_config())
     result = session.run(sc.duration)
     wall = time.perf_counter() - t0  # noqa: DL002(wall_s is host benchmark timing, never simulation semantics)
     metrics = evaluate_session(
@@ -164,6 +176,17 @@ def run_scenario(sc: Scenario, *, task=None, data=None,
         "fault": sc.fault or "clean",
         "fault_injections": int(sum(result.fault_stats.values())),
     })
+    if result.serving is not None:
+        s = result.serving
+        metrics.extras.update({
+            "serve": sc.serve or "custom",
+            "requests": s["requests"],
+            "served": s["served"],
+            "p50_latency_s": s["p50_latency_s"],
+            "p99_latency_s": s["p99_latency_s"],
+            "staleness_mean_rounds": s["staleness_mean_rounds"],
+            "snapshot_mb": round(s["snapshot_bytes"] / 1e6, 3),
+        })
     return result, metrics
 
 
@@ -175,6 +198,7 @@ def _mean_or_none(vals):
 def scenario_matrix(*, algos: Sequence[str] = DEFAULT_ALGOS,
                     regimes: Iterable[str] = tuple(REGIMES),
                     faults: Sequence[Optional[str]] = (None,),
+                    serve: Sequence[Optional[str]] = (None,),
                     n: int = 64, seeds: Sequence[int] = (0,),
                     duration: float = 300.0, model_bytes: int = 346_000,
                     target_round: int = 20, contention: bool = True,
@@ -182,45 +206,71 @@ def scenario_matrix(*, algos: Sequence[str] = DEFAULT_ALGOS,
                     ) -> Dict[str, object]:
     """Sweep the full matrix; returns ``rows`` (one per cell × seed),
     ``summary`` (seed-averaged, one per cell) and ``ratios`` (per
-    regime × fault, baselines vs MoDeST). ``faults`` adds the fault-
-    injection axis: each entry is a :data:`FAULT_REGIMES` key or None
-    for the clean fabric (ratio keys become ``"regime+fault"`` for the
-    faulty cells)."""
+    regime × fault × serve, baselines vs MoDeST). ``faults`` adds the
+    fault-injection axis: each entry is a :data:`FAULT_REGIMES` key or
+    None for the clean fabric. ``serve`` adds the query-plane axis: each
+    entry is a ``repro.serve.SERVE_REGIMES`` key or None for no serving
+    deployment (rows then carry staleness, p50/p99 request latency and
+    snapshot fan-out megabytes). Ratio keys append ``"+fault"`` /
+    ``"+serve:name"`` for the non-default cells."""
     rows, summary, ratios = [], [], {}
     for regime in regimes:
         for fault in faults:
-            per_algo: Dict[str, EvalMetrics] = {}
-            for algo in algos:
-                runs = []
-                for seed in seeds:
-                    sc = Scenario(algo=algo, regime=regime, n=n, seed=seed,
-                                  duration=duration, model_bytes=model_bytes,
-                                  target_round=target_round,
-                                  contention=contention, fault=fault)
-                    _, m = run_scenario(sc, task=task, data=data,
-                                        target=target)
-                    runs.append(m)
-                    rows.append(m.as_row())
-                mean = EvalMetrics(
-                    algo=algo,
-                    time_to_target_s=_mean_or_none(
-                        [m.time_to_target_s for m in runs]),
-                    communication_bytes=int(np.mean(
-                        [m.communication_bytes for m in runs])),
-                    train_node_seconds=float(np.mean(
-                        [m.train_node_seconds for m in runs])),
-                    rounds_completed=int(np.mean(
-                        [m.rounds_completed for m in runs])),
-                    target=runs[0].target,
-                    extras={"regime": regime, "fault": fault or "clean",
-                            "n": n, "seeds": len(seeds),
-                            "reached_target": sum(
-                                m.time_to_target_s is not None
-                                for m in runs)},
-                )
-                per_algo[algo] = mean
-                summary.append(mean.as_row())
-            if "modest" in per_algo and len(per_algo) > 1:
-                key = regime if fault is None else f"{regime}+{fault}"
-                ratios[key] = compare(per_algo, baseline_of="modest")
+            for srv in serve:
+                per_algo: Dict[str, EvalMetrics] = {}
+                for algo in algos:
+                    runs = []
+                    for seed in seeds:
+                        sc = Scenario(algo=algo, regime=regime, n=n,
+                                      seed=seed, duration=duration,
+                                      model_bytes=model_bytes,
+                                      target_round=target_round,
+                                      contention=contention, fault=fault,
+                                      serve=srv)
+                        _, m = run_scenario(sc, task=task, data=data,
+                                            target=target)
+                        runs.append(m)
+                        rows.append(m.as_row())
+                    mean = EvalMetrics(
+                        algo=algo,
+                        time_to_target_s=_mean_or_none(
+                            [m.time_to_target_s for m in runs]),
+                        communication_bytes=int(np.mean(
+                            [m.communication_bytes for m in runs])),
+                        train_node_seconds=float(np.mean(
+                            [m.train_node_seconds for m in runs])),
+                        rounds_completed=int(np.mean(
+                            [m.rounds_completed for m in runs])),
+                        target=runs[0].target,
+                        extras={"regime": regime, "fault": fault or "clean",
+                                "serve": srv or "off",
+                                "n": n, "seeds": len(seeds),
+                                "reached_target": sum(
+                                    m.time_to_target_s is not None
+                                    for m in runs)},
+                    )
+                    if srv is not None:
+                        mean.extras.update({
+                            "p50_latency_s": _mean_or_none(
+                                [m.extras.get("p50_latency_s")
+                                 for m in runs]),
+                            "p99_latency_s": _mean_or_none(
+                                [m.extras.get("p99_latency_s")
+                                 for m in runs]),
+                            "staleness_mean_rounds": _mean_or_none(
+                                [m.extras.get("staleness_mean_rounds")
+                                 for m in runs]),
+                            "snapshot_mb": _mean_or_none(
+                                [m.extras.get("snapshot_mb")
+                                 for m in runs]),
+                        })
+                    per_algo[algo] = mean
+                    summary.append(mean.as_row())
+                if "modest" in per_algo and len(per_algo) > 1:
+                    key = regime
+                    if fault is not None:
+                        key += f"+{fault}"
+                    if srv is not None:
+                        key += f"+serve:{srv}"
+                    ratios[key] = compare(per_algo, baseline_of="modest")
     return {"rows": rows, "summary": summary, "ratios": ratios}

@@ -11,8 +11,27 @@ and runs the same sharded prefill/decode path the dry-run lowers.
 import os
 import sys
 
-if "--devices" in sys.argv:
-    _n = sys.argv[sys.argv.index("--devices") + 1]
+
+def _device_flag(argv):
+    """Extract the --devices value from raw argv, before argparse runs.
+
+    The XLA host-device-count flag must be set before jax imports, so this
+    scan cannot wait for argparse. Handles ``--devices N``, ``--devices=N``
+    and a bare trailing ``--devices`` (returns None and lets argparse
+    report the missing value instead of raising IndexError here).
+    """
+    for i, arg in enumerate(argv):
+        if arg == "--devices":
+            if i + 1 < len(argv):
+                return argv[i + 1]
+            return None
+        if arg.startswith("--devices="):
+            return arg.split("=", 1)[1]
+    return None
+
+
+_n = _device_flag(sys.argv[1:])
+if _n is not None and _n.isdigit() and int(_n) > 0:
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                                + f" --xla_force_host_platform_device_count={_n}"
                                ).strip()
@@ -48,6 +67,11 @@ def main():
 
     if args.devices:
         mp = args.model_parallel
+        if mp <= 0 or jax.device_count() % mp != 0:
+            raise SystemExit(
+                f"[serve] device_count={jax.device_count()} is not divisible "
+                f"by --model-parallel {mp}; pick a model-parallel degree "
+                "that divides the device count")
         mesh = make_mesh((jax.device_count() // mp, mp), ("data", "model"))
         mesh_cfg = MeshConfig(data=jax.device_count() // mp, model=mp)
     else:
@@ -98,7 +122,8 @@ def main():
 
     toks = jnp.concatenate(generated, axis=1)
     tps = args.batch * (args.new_tokens - 1) / max(t_decode, 1e-9)
-    print(f"[serve] arch={cfg.name} batch={args.batch} "
+    print(f"[serve] arch={cfg.name} devices={jax.device_count()} "
+          f"batch={args.batch} "
           f"prefill({args.prompt_len} toks)={t_prefill:.3f}s "
           f"decode={t_decode:.3f}s ({tps:.1f} tok/s)")
     print(f"[serve] sample output ids: {toks[0, :12].tolist()}")

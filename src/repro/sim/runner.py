@@ -38,6 +38,16 @@ def _fault_setup(session, fault):
     return None if fault is None else FaultInjector(fault, session)
 
 
+def _serve_setup(session, serve, speeds, seed):
+    """Attach a serving deployment (None = no fabric at all: no replica or
+    client endpoints, no events, no RNG draws — the golden trajectories
+    stay byte-identical by construction, docs/SERVE.md)."""
+    if serve is None:
+        return None
+    from repro.serve import ServingFabric
+    return ServingFabric(session, serve, speeds, seed)
+
+
 def _speeds(n: int, seed: int, base: float = 0.05, spread: float = 3.0):
     """Heterogeneous per-node seconds-per-batch (stragglers exist)."""
     rng = np.random.default_rng(seed + 1234)
@@ -105,6 +115,9 @@ class SessionResult:
     # including compute burned by trainings that were cancelled/crashed
     train_node_seconds: float = 0.0
     trainings_completed: int = 0
+    # query-plane summary (repro.serve, docs/SERVE.md); None unless the
+    # session ran with a serve= deployment attached
+    serving: Optional[dict] = None
 
     def metric_curve(self, key: str):
         return [(h["t"], h[key]) for h in self.history if key in h]
@@ -133,6 +146,11 @@ class ModestSession:
     ``"sequential"`` (per-node reference path), or None for auto. Event
     semantics are identical either way — per-node train durations still
     come from the cost model; only wall-clock changes (docs/ENGINE.md).
+
+    ``serve`` attaches a :class:`~repro.serve.ServeConfig` deployment:
+    completed rounds fan out as snapshots to serving replicas and query
+    traffic is answered alongside training on the same fabric
+    (docs/SERVE.md). ``None`` (default) builds no serving state at all.
     """
 
     def __init__(self, *, n_nodes: Optional[int] = None,
@@ -146,7 +164,7 @@ class ModestSession:
                  profile=None, churn_from_profile: bool = True,
                  contention: bool = True,
                  engine: Optional[str] = None,
-                 fault=None):
+                 fault=None, serve=None):
         n_nodes, task = _profile_defaults(profile, n_nodes, task,
                                           extra_required=(("mcfg", mcfg),))
         # Churny regimes need sf < 1 to keep rounds moving when sampled
@@ -220,6 +238,12 @@ class ModestSession:
         for nid in offline_now:
             self.nodes[nid].online = False
 
+        # Serving rides on the same network fabric; built before the
+        # round-1 bootstrap so the bootstrap aggregation (which may
+        # complete round 1 synchronously under fixed_aggregator) already
+        # publishes its snapshot.
+        self.serving = _serve_setup(self, serve, speeds, seed)
+
         # Round-1 bootstrap: nodes that find themselves in S^1 self-activate
         # (only nodes whose trace says they are online at t=0 qualify). When
         # the whole population is trace-offline at t=0 (e.g. lockstep diurnal
@@ -286,6 +310,8 @@ class ModestSession:
                 self._eval_models[k] = params
             elif params is None and (k % self.eval_every == 0 or k == 1):
                 self.result.history.append({"t": now, "round": k})
+            if self.serving is not None:
+                self.serving.on_round(k, params, node.node_id)
 
     # ------------------------------------------------------------------- churn
 
@@ -372,11 +398,15 @@ class ModestSession:
             self.churn_driver.install(duration)
         if self.fault_injector is not None:
             self.fault_injector.install(duration)
+        if self.serving is not None:
+            self.serving.install(duration)
         self.sim.run(until=duration)
         if self.churn_driver is not None:
             self.result.churn_events = self.churn_driver.events_fired
         if self.fault_injector is not None:
             self.result.fault_stats = dict(self.fault_injector.stats)
+        if self.serving is not None:
+            self.result.serving = self.serving.summary()
         # Evaluate collected models (lazily, once, at the end — evaluation
         # does not consume simulated time, matching §4.2). One vmapped
         # sweep over all snapshots for tasks that support it.
@@ -542,7 +572,7 @@ class DSGDSession:
                  seed: int = 0, eval_every_rounds: int = 10,
                  profile=None, churn_from_profile: bool = True,
                  contention: bool = True, engine: Optional[str] = None,
-                 fault=None):
+                 fault=None, serve=None):
         n_nodes, task = _profile_defaults(profile, n_nodes, task)
         tcfg = tcfg or TrainConfig()
         self.sim = Simulator()
@@ -563,6 +593,8 @@ class DSGDSession:
             node.params = task.init_params(tcfg.seed) if data is not None else None
             self.net.register(node)
             self.nodes[str(i)] = node
+        self.profile = profile
+        self.serving = _serve_setup(self, serve, speeds, seed)
         self.churn_driver, offline_now = _churn_setup(
             self.sim, profile, churn_from_profile, list(self.nodes),
             self._trace_offline, self._trace_online,
@@ -592,12 +624,16 @@ class DSGDSession:
         if new_round > self.result.rounds_completed:
             self.result.round_times.append((self.sim.now, new_round))
             self.result.rounds_completed = new_round
+            if self.serving is not None:
+                self.serving.on_round(new_round, params, node_id)
 
     def run(self, duration: float) -> SessionResult:
         if self.churn_driver is not None:
             self.churn_driver.install(duration)
         if self.fault_injector is not None:
             self.fault_injector.install(duration)
+        if self.serving is not None:
+            self.serving.install(duration)
         for node in self.nodes.values():
             if node.online:
                 node.start_round()
@@ -606,6 +642,8 @@ class DSGDSession:
             self.result.churn_events = self.churn_driver.events_fired
         if self.fault_injector is not None:
             self.result.fault_stats = dict(self.fault_injector.stats)
+        if self.serving is not None:
+            self.result.serving = self.serving.summary()
         if self.data is not None and self.data.test is not None:
             for k, snaps in sorted(self._snapshots.items()):
                 metrics = self.engine.evaluate_models([p for _, p in snaps],
@@ -731,7 +769,7 @@ class GossipSession:
                  seed: int = 0, eval_every_rounds: int = 10,
                  period: float = 5.0, profile=None,
                  churn_from_profile: bool = True, contention: bool = True,
-                 engine: Optional[str] = None, fault=None):
+                 engine: Optional[str] = None, fault=None, serve=None):
         n_nodes, task = _profile_defaults(profile, n_nodes, task)
         tcfg = tcfg or TrainConfig()
         self.sim = Simulator()
@@ -753,6 +791,8 @@ class GossipSession:
             node.params = task.init_params(tcfg.seed) if data is not None else None
             self.net.register(node)
             self.nodes[str(i)] = node
+        self.profile = profile
+        self.serving = _serve_setup(self, serve, speeds, seed)
         self.churn_driver, offline_now = _churn_setup(
             self.sim, profile, churn_from_profile, list(self.nodes),
             self._trace_offline, self._trace_online, network=self.net)
@@ -780,6 +820,8 @@ class GossipSession:
         if cycle > self.result.rounds_completed:
             self.result.round_times.append((self.sim.now, cycle))
             self.result.rounds_completed = cycle
+            if self.serving is not None:
+                self.serving.on_round(cycle, params, node_id)
         if node_id == "0":
             if cycle % self.eval_every == 0 and params is not None:
                 self._snapshots[cycle] = (self.sim.now, params)
@@ -789,6 +831,8 @@ class GossipSession:
             self.churn_driver.install(duration)
         if self.fault_injector is not None:
             self.fault_injector.install(duration)
+        if self.serving is not None:
+            self.serving.install(duration)
         for node in self.nodes.values():
             if node.online:
                 node.start()
@@ -797,6 +841,8 @@ class GossipSession:
             self.result.churn_events = self.churn_driver.events_fired
         if self.fault_injector is not None:
             self.result.fault_stats = dict(self.fault_injector.stats)
+        if self.serving is not None:
+            self.result.serving = self.serving.summary()
         if self.data is not None and self.data.test is not None:
             snaps = sorted(self._snapshots.items())
             metrics = self.engine.evaluate_models([p for _, (_, p) in snaps],

@@ -96,6 +96,23 @@ def test_fault_none_byte_identical_to_pr4(session_cls):
         "document why in the commit message")
 
 
+@pytest.mark.parametrize("session_cls",
+                         [ModestSession, DSGDSession, GossipSession])
+def test_serve_none_byte_identical_to_golden(session_cls):
+    """The query plane is zero-cost-by-default (PR 10): with no serve
+    config attached, no replicas/clients register, no arrival RNG is
+    consumed, and the diurnal goldens stay byte-identical."""
+    sess = session_cls(profile=diurnal_profile(n=24, seed=3), serve=None)
+    res = sess.run(180.0)
+    got = (res.rounds_completed, res.usage["total_bytes"],
+           _fingerprint(res))
+    assert got == GOLDEN[session_cls], (
+        "a serve=None session diverged from the golden trajectory — "
+        "serving must be zero-cost when disabled; if this change is "
+        "deliberate, update GOLDEN and document why in the commit message")
+    assert res.serving is None
+
+
 # ---------------------------------------------------- event-queue differential
 
 

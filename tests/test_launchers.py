@@ -43,3 +43,52 @@ def test_serve_cli():
     out = run_cli(["repro.launch.serve", "--arch", "rwkv6-1.6b",
                    "--batch", "2", "--prompt-len", "8", "--new-tokens", "4"])
     assert "[serve]" in out and "tok/s" in out
+
+
+# ------------------------------------------------- --devices flag regression
+
+
+def test_device_flag_forms():
+    """The pre-argparse scan must see every spelling argparse accepts."""
+    from repro.launch.serve import _device_flag
+
+    assert _device_flag(["--devices", "8"]) == "8"
+    assert _device_flag(["--devices=8"]) == "8"
+    assert _device_flag(["--batch", "4", "--devices", "2"]) == "2"
+    assert _device_flag(["--batch", "4"]) is None
+    # bare trailing --devices: no value, and no IndexError — argparse
+    # reports the missing argument downstream
+    assert _device_flag(["--devices"]) is None
+
+
+def test_serve_cli_devices_equals_form():
+    """--devices=N (the form the old scan silently skipped) must actually
+    materialize N host devices before jax initializes."""
+    out = run_cli(["repro.launch.serve", "--arch", "rwkv6-1.6b",
+                   "--batch", "2", "--prompt-len", "8", "--new-tokens", "4",
+                   "--devices=2", "--model-parallel", "2"])
+    assert "devices=2" in out
+
+
+def _run_cli_raw(args, timeout=400):
+    return subprocess.run([sys.executable, "-m", *args],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=ENV, cwd=os.path.join(SRC, ".."))
+
+
+def test_serve_cli_indivisible_model_parallel():
+    proc = _run_cli_raw(["repro.launch.serve", "--arch", "rwkv6-1.6b",
+                         "--devices", "2", "--model-parallel", "3"])
+    assert proc.returncode != 0
+    assert "not divisible" in proc.stderr + proc.stdout
+    assert "Traceback" not in proc.stderr
+
+
+def test_serve_cli_bare_trailing_devices():
+    """A trailing --devices with no value is an argparse usage error, not
+    an IndexError in the pre-import scan."""
+    proc = _run_cli_raw(["repro.launch.serve", "--arch", "rwkv6-1.6b",
+                         "--devices"])
+    assert proc.returncode != 0
+    assert "IndexError" not in proc.stderr
+    assert "expected one argument" in proc.stderr

@@ -1,0 +1,293 @@
+"""repro.serve: snapshot fan-out, admission/batching queues, query traffic.
+
+Unit layer drives one replica directly on a Simulator+Network pair;
+integration layer attaches deployments to real sessions and checks the
+metrics surface, determinism, and the checkpoint spool round-trip
+(served params bit-equal to the training-side model at the same round).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import messages as M
+from repro.serve import (SERVE_REGIMES, MethodConfig, RequestLoadDriver,
+                         ServeConfig, ServingReplica)
+from repro.sim.clock import Simulator
+from repro.sim.network import Network
+from repro.sim.runner import DSGDSession, GossipSession, ModestSession
+from repro.traces import diurnal_profile
+
+# ------------------------------------------------------------- unit harness
+
+
+class _Sink:
+    """Query-client stand-in: records every response delivered to it."""
+
+    def __init__(self, node_id):
+        self.node_id = node_id
+        self.online = True
+        self.got = []
+
+    def receive(self, msg):
+        self.got.append(msg)
+
+
+class _Fabric:
+    frontier = 0
+
+    def load_snapshot(self, msg):
+        return msg.model
+
+
+def _rig(mcfg: MethodConfig, speed: float = 0.05):
+    sim = Simulator()
+    net = Network(sim, 4, contention=False)
+    sink = _Sink("0")
+    net.register(sink)
+    rep = ServingReplica("1", sim, net, (mcfg,), speed, _Fabric())
+    net.register(rep)
+    return sim, net, sink, rep
+
+
+def _snapshot(k: int) -> M.SnapshotMsg:
+    return M.SnapshotMsg(sender="0", round_k=k,
+                         model=M.ModelPayload(nbytes=1000))
+
+
+def _request(i: int, method: str = "predict") -> M.RequestMsg:
+    return M.RequestMsg(sender="0", req_id=i, method=method)
+
+
+def test_unloaded_rejection():
+    sim, net, sink, rep = _rig(MethodConfig())
+    sim.schedule(0.0, lambda: rep.receive(_request(0)))
+    sim.run(10.0)
+    assert rep.dropped_unloaded == 1
+    assert [m.dropped for m in sink.got] == ["unloaded"]
+
+
+def test_admission_drop_beyond_queue_depth():
+    mcfg = MethodConfig(max_batch=4, max_queue=4, batch_wait_s=0.01)
+    sim, net, sink, rep = _rig(mcfg)
+    rep.receive(_snapshot(1))
+    for i in range(12):      # 4 dispatch immediately, 4 queue, 4 rejected
+        sim.schedule(0.0, lambda i=i: rep.receive(_request(i)))
+    sim.run(30.0)
+    assert rep.dropped_admission == 4
+    assert rep.items_served == 8
+    served = [m for m in sink.got if not m.dropped]
+    assert len(served) == 8
+
+
+def test_deadline_drop_while_busy():
+    # batch runs ~1.2 s; the two overflow requests expire at 0.1 s
+    mcfg = MethodConfig(max_batch=2, deadline_s=0.1, cost_base=1.0,
+                        cost_per_item=0.1)
+    sim, net, sink, rep = _rig(mcfg, speed=1.0)
+    rep.receive(_snapshot(1))
+    for i in range(4):
+        sim.schedule(0.0, lambda i=i: rep.receive(_request(i)))
+    sim.run(30.0)
+    assert rep.dropped_deadline == 2
+    assert rep.items_served == 2
+    assert sorted(m.dropped for m in sink.got) == ["", "", "deadline",
+                                                   "deadline"]
+
+
+def test_batching_never_exceeds_max_batch():
+    mcfg = MethodConfig(max_batch=3, max_queue=64, batch_wait_s=0.02)
+    sim, net, sink, rep = _rig(mcfg)
+    rep.receive(_snapshot(1))
+    for i in range(17):
+        sim.schedule(0.001 * i, lambda i=i: rep.receive(_request(i)))
+    sim.run(60.0)
+    assert rep.items_served == 17
+    assert rep.batches >= -(-17 // mcfg.max_batch)     # >= ceil(17/3)
+    assert rep.items_served <= rep.batches * mcfg.max_batch
+
+
+def test_unknown_method_rejected():
+    sim, net, sink, rep = _rig(MethodConfig(name="predict"))
+    rep.receive(_snapshot(1))
+    sim.schedule(0.0, lambda: rep.receive(_request(0, method="embed")))
+    sim.run(10.0)
+    assert rep.dropped_admission == 1
+    assert [m.dropped for m in sink.got] == ["admission"]
+
+
+def test_snapshot_install_is_monotone():
+    sim, net, sink, rep = _rig(MethodConfig())
+    rep.receive(_snapshot(3))
+    rep.receive(_snapshot(2))     # reordered/duplicated late copy
+    assert rep.round == 3
+    assert rep.stale_snapshots_dropped == 1
+    rep.receive(_snapshot(5))
+    assert rep.round == 5
+    assert rep.snapshots_installed == 2
+    assert [k for k, _ in rep.install_log] == [3, 5]
+
+
+def test_replica_routing_order():
+    class _Net:
+        def latency(self, src, dst):
+            return {"10": 0.5, "11": 0.05, "12": 0.2}[dst]
+
+    sim = Simulator()
+    reps = [_Sink("10"), _Sink("11"), _Sink("12")]
+    client = _Sink("0")
+    near = RequestLoadDriver(sim, ServeConfig(routing="nearest"),
+                             [client], reps, _Net(), seed=0)
+    assert near._replica_order(client) == ["11", "12", "10"]
+    rr = RequestLoadDriver(sim, ServeConfig(routing="round_robin"),
+                           [client], reps, _Net(), seed=0)
+    assert rr._replica_order(client) == ["10", "11", "12"]
+
+
+# ------------------------------------------------------------- integration
+
+
+def _serve_session(session_cls=ModestSession, cfg=None, n=16, seed=1,
+                   duration=120.0):
+    sess = session_cls(profile=diurnal_profile(n=n, seed=seed),
+                       serve=cfg or ServeConfig())
+    res = sess.run(duration)
+    return sess, res
+
+
+@pytest.mark.parametrize("session_cls",
+                         [ModestSession, DSGDSession, GossipSession])
+def test_serve_end_to_end(session_cls):
+    sess, res = _serve_session(session_cls)
+    s = res.serving
+    assert s is not None
+    assert s["requests"] > 0
+    assert s["served"] > 0
+    assert s["lost"] == 0
+    assert s["p50_latency_s"] is not None
+    assert s["p99_latency_s"] >= s["p50_latency_s"]
+    assert s["snapshots_published"] >= 1
+    assert s["snapshot_bytes"] > 0
+    assert s["staleness_mean_rounds"] is not None
+    # every replica eventually holds some published round
+    assert all(r >= 1 for r in s["replica_rounds"])
+
+
+def test_serving_metrics_deterministic():
+    _, r1 = _serve_session(duration=90.0)
+    _, r2 = _serve_session(duration=90.0)
+    assert r1.serving == r2.serving
+
+
+def test_serve_none_is_structurally_absent():
+    sess = ModestSession(profile=diurnal_profile(n=8, seed=0), serve=None)
+    assert sess.serving is None
+    res = sess.run(30.0)
+    assert res.serving is None
+
+
+def test_flash_crowd_regime():
+    cfg = SERVE_REGIMES["flash_crowd"](16, 1, 120.0)
+    sess, res = _serve_session(cfg=cfg)
+    s = res.serving
+    assert s["requests"] > 0 and s["served"] > 0
+    assert s["p99_latency_s"] is not None
+    # higher per-client rate than the steady regime at the same scale
+    steady = _serve_session(cfg=SERVE_REGIMES["steady"](16, 1, 120.0))[1]
+    assert s["requests"] > steady.serving["requests"]
+
+
+def test_nearest_routing_session():
+    cfg = ServeConfig(routing="nearest", n_replicas=3)
+    sess, res = _serve_session(cfg=cfg, duration=90.0)
+    assert res.serving["served"] > 0
+
+
+def test_publish_every_thins_snapshots():
+    cfg = ServeConfig(publish_every=5)
+    sess, res = _serve_session(cfg=cfg)
+    s = res.serving
+    rounds = [k for k, _ in sess.serving.replicas[0].install_log]
+    assert all(k == 1 or k % 5 == 0 for k in rounds)
+    assert s["frontier_round"] > max(rounds) - 5 - 1
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(n_replicas=0)
+    with pytest.raises(ValueError):
+        ServeConfig(routing="random")
+    with pytest.raises(ValueError):
+        MethodConfig(max_batch=0)
+    with pytest.raises(ValueError):
+        MethodConfig(deadline_s=0.0)
+
+
+def test_scenario_matrix_serve_axis():
+    from repro.eval import scenario_matrix
+    out = scenario_matrix(algos=("modest", "dsgd"), regimes=("diurnal",),
+                          serve=(None, "steady"), n=12, seeds=(0,),
+                          duration=60.0)
+    served_rows = [r for r in out["rows"] if r.get("serve") == "steady"]
+    assert len(served_rows) == 2
+    for row in served_rows:
+        assert row["requests"] > 0
+        assert row["p50_latency_s"] is not None
+        assert row["p99_latency_s"] is not None
+        assert row["snapshot_mb"] > 0
+    assert "diurnal+serve:steady" in out["ratios"]
+    assert "diurnal" in out["ratios"]
+
+
+# ----------------------------------------------- checkpoint spool round-trip
+
+
+def test_snapshot_spool_restore_equivalence(tmp_path):
+    """Snapshot-publish → replica-restore equivalence: with the spool
+    enabled the served model is exactly the training-side model at the
+    replica's installed round (leaf-wise bit-equal, identical eval)."""
+    import jax
+
+    from repro.config import ModestConfig, TrainConfig
+    from repro.data import make_classification_task
+    from repro.engine.flat import as_tree
+    from repro.models.tasks import cnn_task
+
+    n = 8
+    task = cnn_task()
+    data = make_classification_task(n, samples_per_node=20, iid=True, seed=0)
+    cfg = ServeConfig(n_replicas=1, rate_per_client=0.02,
+                      spool_dir=str(tmp_path))
+    sess = ModestSession(n_nodes=n,
+                         mcfg=ModestConfig(n_nodes=n, sample_size=3,
+                                           n_aggregators=1,
+                                           success_fraction=1.0),
+                         tcfg=TrainConfig(batch_size=10),
+                         task=task, data=data, seed=0, serve=cfg)
+
+    # record the training-side params the session hands to the fabric
+    recorded = {}
+    fabric = sess.serving
+    orig_on_round = fabric.on_round
+
+    def on_round(k, params, src):
+        if params is not None:
+            recorded[k] = jax.tree.map(np.array, as_tree(params))
+        orig_on_round(k, params, src)
+
+    fabric.on_round = on_round
+    sess.run(60.0)
+
+    replica = fabric.replicas[0]
+    assert replica.round >= 1
+    assert replica.round in recorded, (replica.round, sorted(recorded))
+    served = replica.params.params
+    train_side = recorded[replica.round]
+    s_leaves = jax.tree.leaves(served)
+    t_leaves = jax.tree.leaves(train_side)
+    assert len(s_leaves) == len(t_leaves)
+    for s, t in zip(s_leaves, t_leaves):
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(t))
+    # and the served model evaluates identically to the training frontier
+    m_served = task.evaluate(served, data.test)
+    m_train = task.evaluate(train_side, data.test)
+    assert m_served == m_train
